@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: router construction at benchmark-scale epochs,
+timing, CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.routers import make_router
+
+RESULTS = Path(os.environ.get("REPRO_RESULTS", "results"))
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+# epoch scale: 1.0 = paper-scale training of the learned routers; the default
+# keeps the full suite tractable on 1 CPU core (rankings are stable well
+# below full epochs — verified on RouterBench).
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.35"))
+
+_EPOCHS = {
+    "linear_mf": 120, "mlp": 120, "mlp_mf": 120,
+    "graph10": 60, "graph100": 60,
+    "attn10": 40, "attn100": 40, "dattn10": 40, "dattn100": 40,
+}
+
+
+def bench_router(name: str):
+    """Router with benchmark-scale training epochs."""
+    if name in ("knn10", "knn100", "linear"):
+        return make_router(name)
+    epochs = max(5, int(_EPOCHS[name] * SCALE))
+    return make_router(name, epochs=epochs)
+
+
+def routers_from_env(default):
+    env = os.environ.get("REPRO_BENCH_ROUTERS")
+    return env.split(",") if env else default
+
+
+def write_csv(path: Path, header, rows):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"  [csv] {path}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,27 @@
+"""Figure 1: embedding distance vs model-performance agreement (the
+delta-locality evidence), on the ArcC- and GSM-analogue RouterBench tasks."""
+from __future__ import annotations
+
+from repro.core.diagnostics import locality_check
+from repro.data.routing_bench import routerbench_tasks
+
+from .common import RESULTS, write_csv
+
+
+def run(seed: int = 0):
+    tasks = routerbench_tasks()
+    rows = []
+    for t in ("arcc", "gsm"):
+        ds = tasks[t]
+        loc = locality_check(ds.embeddings, ds.scores, seed=seed)
+        for c, a in zip(loc["bin_centers"], loc["bin_agreement"]):
+            rows.append([t, round(float(c), 4), round(float(a), 4),
+                         round(loc["pearson_r"], 4)])
+        print(f"  fig1 {t}: pearson r = {loc['pearson_r']:.3f}")
+    write_csv(RESULTS / "fig1_locality.csv",
+              ["task", "distance_bin", "agreement", "pearson_r"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""§7 empirical validation: TwoNN intrinsic dimension of every benchmark's
+embedding space (paper: RouterBench ~2-28; VLM ~13-18, ambient 768/3584)."""
+from __future__ import annotations
+
+from repro.core.diagnostics import twonn_intrinsic_dim
+from repro.data.routing_bench import full_suite, vlm_benchmarks
+
+from .common import RESULTS, write_csv
+
+
+def run(seed: int = 0):
+    rows = []
+    for name, ds in full_suite().items():
+        d = twonn_intrinsic_dim(ds.embeddings, seed=seed)
+        rows.append([name, ds.dim, round(d, 1)])
+        print(f"  twonn {name}: {d:.1f} (ambient {ds.dim})")
+    vlm = vlm_benchmarks()
+    for name in list(vlm)[:4]:
+        ds = vlm[name]
+        d = twonn_intrinsic_dim(ds.embeddings, seed=seed)
+        rows.append([name, ds.dim, round(d, 1)])
+        print(f"  twonn {name}: {d:.1f} (ambient {ds.dim})")
+    write_csv(RESULTS / "intrinsic_dim.csv",
+              ["benchmark", "ambient_dim", "twonn_id"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick suite
+  PYTHONPATH=src python -m benchmarks.run --full     # everything
+  REPRO_BENCH_ROUTERS=knn10,knn100,linear ... --only table2
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark and
+writes per-table CSVs under results/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run every table at the full router set")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table2,fig1")
+    args = ap.parse_args()
+
+    from . import (bandit_online, fig1_locality, intrinsic_dim, seed_stability,
+                   table2_text_auc, table3_latency, table4_ood,
+                   table5_vlm_auc, tableD_selection, tableF_scaling,
+                   tableI_embeddings, thm72_sample_complexity)
+
+    # quick mode exercises the harness end-to-end on the fast tables; the
+    # complete 12-router Tables 2/4/5/D/I ship in results/ from `--full`.
+    quick_default = ["fig1", "intrinsic", "tableF", "seeds", "table3"]
+    full_suite = quick_default + ["table4", "table5", "tableD", "tableI",
+                                  "seeds", "bandit"]
+    jobs = {
+        "table2": table2_text_auc.run,
+        "table3": table3_latency.run,
+        "table4": table4_ood.run,
+        "table5": table5_vlm_auc.run,
+        "tableD": tableD_selection.run,
+        "tableF": tableF_scaling.run,
+        "tableI": tableI_embeddings.run,
+        "fig1": fig1_locality.run,
+        "intrinsic": intrinsic_dim.run,
+        "thm72": thm72_sample_complexity.run,
+        "seeds": seed_stability.run,
+        "bandit": bandit_online.run,
+    }
+    selected = (args.only.split(",") if args.only
+                else (full_suite if args.full else quick_default))
+    if not args.full and not os.environ.get("REPRO_BENCH_ROUTERS"):
+        # quick mode: the simple-method subset (full 12-router sweep via
+        # --full; its CSVs ship under results/)
+        os.environ["REPRO_BENCH_ROUTERS"] = (
+            "knn10,knn100,linear,linear_mf,mlp,mlp_mf")
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            rows = jobs[name]()
+            dt = time.time() - t0
+            n = max(len(rows), 1) if rows is not None else 1
+            print(f"{name},{dt / n * 1e6:.0f},rows={n} wall={dt:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},-1,FAILED:{type(e).__name__}:{e}")
+            import traceback
+            traceback.print_exc()
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""§6 'Statistical Validation': AUC mean ± std over independent split seeds
+(paper: kNN 77.31±0.27, Linear 77.52±0.21, MLP 76.94±0.33 — small stds,
+stable ranking)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import eval as E
+from repro.data.routing_bench import routerbench_combined
+
+from .common import RESULTS, bench_router, write_csv
+
+
+def run(seed: int = 0):
+    rows = []
+    for rn in ("knn100", "linear", "mlp"):
+        aucs = []
+        for s in range(3):
+            ds = routerbench_combined()
+            ds.split(seed=100 + s)
+            r = bench_router(rn).fit(ds, seed=s)
+            aucs.append(E.utility_auc(r, ds)["auc"])
+        rows.append([rn, round(float(np.mean(aucs)), 2),
+                     round(float(np.std(aucs)), 2)])
+        print(f"  seeds {rn}: {np.mean(aucs):.2f} ± {np.std(aucs):.2f}")
+    write_csv(RESULTS / "seed_stability.csv", ["router", "mean", "std"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

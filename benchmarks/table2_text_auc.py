@@ -1,0 +1,41 @@
+"""Table 2: AUC on the text routing benchmarks (utility prediction)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import eval as E
+from repro.core.routers import PAPER_ORDER
+from repro.data.routing_bench import full_suite
+
+from .common import RESULTS, Timer, bench_router, routers_from_env, write_csv
+
+
+def run(seed: int = 0):
+    suite = full_suite()
+    router_names = routers_from_env(PAPER_ORDER)
+    cols = list(suite)
+    rows = []
+    rows.append(["Oracle"] + [round(E.oracle_auc(suite[c])["auc"], 2)
+                              for c in cols] + [""])
+    rows.append(["Random"] + [round(E.random_auc(suite[c])["auc"], 2)
+                              for c in cols] + [""])
+    timings = {}
+    for rn in router_names:
+        vals = []
+        t0 = time.time()
+        for c in cols:
+            r = bench_router(rn).fit(suite[c], seed=seed)
+            vals.append(round(E.utility_auc(r, suite[c])["auc"], 2))
+        timings[rn] = time.time() - t0
+        avg = round(float(np.mean(vals)), 2)
+        rows.append([rn] + vals + [avg])
+        print(f"  table2 {rn}: avg={avg} ({timings[rn]:.0f}s)")
+    write_csv(RESULTS / "table2_text_auc.csv",
+              ["router"] + cols + ["avg"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

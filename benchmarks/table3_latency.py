@@ -1,0 +1,42 @@
+"""Table 3 / G.1: cumulative routing (inference) time over the RouterBench
+test sets — training/index-build excluded, exactly as in the paper."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.routers import PAPER_ORDER
+from repro.data.routing_bench import routerbench_tasks
+
+from .common import RESULTS, bench_router, routers_from_env, write_csv
+
+
+def run(seed: int = 0):
+    tasks = routerbench_tasks()
+    router_names = routers_from_env(PAPER_ORDER)
+    rows = []
+    for rn in router_names:
+        per_task = []
+        fitted = {}
+        for tname, ds in tasks.items():
+            fitted[tname] = bench_router(rn).fit(ds, seed=seed)
+        for tname, ds in tasks.items():
+            X = ds.part("test")[0]
+            r = fitted[tname]
+            r.predict_utility(X[:8])            # warm the jit cache
+            t0 = time.time()
+            for _ in range(3):                  # stabilize
+                r.predict_utility(X)
+            per_task.append((time.time() - t0) / 3)
+        total = sum(per_task)
+        rows.append([rn] + [round(t, 4) for t in per_task]
+                    + [round(total / len(per_task), 4), round(total, 4)])
+        print(f"  table3 {rn}: SUM={total:.3f}s")
+    write_csv(RESULTS / "table3_latency.csv",
+              ["router"] + list(tasks) + ["avg_s", "sum_s"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

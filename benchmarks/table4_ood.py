@@ -1,0 +1,43 @@
+"""Table 4 / Appendix H: cross-dataset OOD robustness — train on one
+RouterBench task, test on the other five (36 (train, test) pairs per router,
+6 of them in-distribution)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import eval as E
+from repro.core.routers import PAPER_ORDER
+from repro.data.routing_bench import routerbench_tasks
+
+from .common import RESULTS, bench_router, routers_from_env, write_csv
+
+
+def run(seed: int = 0):
+    tasks = routerbench_tasks()
+    names = list(tasks)
+    router_names = routers_from_env(PAPER_ORDER)
+    rows = []
+    for rn in router_names:
+        id_aucs, ood_aucs = [], []
+        for tr in names:
+            r = bench_router(rn).fit(tasks[tr], seed=seed)
+            for te in names:
+                if te == tr:
+                    auc = E.utility_auc(r, tasks[tr], split="test")["auc"]
+                    id_aucs.append(auc)
+                else:
+                    ood = tasks[tr].with_ood_test(tasks[te])
+                    auc = E.utility_auc(r, ood, split="test")["auc"]
+                    ood_aucs.append(auc)
+        mid, mood = float(np.mean(id_aucs)), float(np.mean(ood_aucs))
+        rows.append([rn, round(mid, 2), round(mood, 2),
+                     round(mid - mood, 2)])
+        print(f"  table4 {rn}: ID={mid:.2f} OOD={mood:.2f} "
+              f"delta={mid-mood:.2f}")
+    write_csv(RESULTS / "table4_ood.csv",
+              ["router", "avg_ID", "avg_OOD", "delta"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Table 5: AUC on the vision-language routing benchmarks (first multi-modal
+routing suite; 3584-d fused embeddings)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import eval as E
+from repro.core.routers import PAPER_ORDER
+from repro.data.routing_bench import vlm_benchmarks
+
+from .common import RESULTS, bench_router, routers_from_env, write_csv
+
+
+def run(seed: int = 0):
+    suite = vlm_benchmarks()
+    cols = list(suite)
+    router_names = routers_from_env(PAPER_ORDER)
+    rows = []
+    rows.append(["Oracle"] + [round(E.oracle_auc(suite[c])["auc"], 2)
+                              for c in cols] + [""])
+    rows.append(["Random"] + [round(E.random_auc(suite[c])["auc"], 2)
+                              for c in cols] + [""])
+    for rn in router_names:
+        vals = []
+        for c in cols:
+            r = bench_router(rn).fit(suite[c], seed=seed)
+            vals.append(round(E.utility_auc(r, suite[c])["auc"], 2))
+        avg = round(float(np.mean(vals)), 2)
+        rows.append([rn] + vals + [avg])
+        print(f"  table5 {rn}: avg={avg}")
+    write_csv(RESULTS / "table5_vlm_auc.csv",
+              ["router"] + cols + ["avg"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Appendix D: selection-based evaluation at the three preference presets."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.eval import PRESETS, selection_utility
+from repro.core.routers import PAPER_ORDER
+from repro.data.routing_bench import routerbench_combined
+
+from .common import RESULTS, bench_router, routers_from_env, write_csv
+
+
+def run(seed: int = 0):
+    ds = routerbench_combined()
+    router_names = routers_from_env(
+        ["knn10", "knn100", "linear", "mlp", "graph10", "attn10"])
+    rows = []
+    for rn in router_names:
+        su = selection_utility(lambda rn=rn: bench_router(rn), ds, seed=seed)
+        rows.append([rn] + [round(su[k], 2) for k in PRESETS]
+                    + [round(su["avg"], 2)])
+        print(f"  tableD {rn}: avg={su['avg']:.2f}")
+    write_csv(RESULTS / "tableD_selection.csv",
+              ["router"] + list(PRESETS) + ["avg"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

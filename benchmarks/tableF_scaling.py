@@ -1,0 +1,50 @@
+"""Tables F.1/F.2: kNN memory footprint and index-construction scaling.
+Memory is measured from the actual support arrays; build time = normalize +
+device put + first-retrieval compile, timed; retrieval latency per query
+batch is measured at several support sizes."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.routers.knn import KNNRouter
+from repro.core.dataset import RoutingDataset
+
+from .common import RESULTS, write_csv
+
+
+def _synth(n, d=768, m=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return RoutingDataset(
+        f"scale-{n}", rng.normal(size=(n, d)).astype(np.float32),
+        rng.uniform(0, 1, (n, m)).astype(np.float32),
+        rng.uniform(0, 0.01, (n, m)).astype(np.float32),
+        [f"m{i}" for i in range(m)])
+
+
+def run(seed: int = 0):
+    rows = []
+    for n in [563, 9107, 15117, 100_000]:
+        ds = _synth(n)
+        mem = (ds.embeddings.nbytes + ds.scores.nbytes + ds.costs.nbytes)
+        t0 = time.time()
+        r = KNNRouter(k=10).fit(ds)
+        r.predict_utility(ds.embeddings[:64])       # build+compile
+        build = time.time() - t0
+        t0 = time.time()
+        r.predict_utility(ds.embeddings[:512])
+        query = (time.time() - t0) / 512
+        rows.append([n, round(mem / 1e6, 1), round(mem / n / 1e3, 2),
+                     round(build, 3), round(build / n * 1e3, 4),
+                     round(query * 1e3, 4)])
+        print(f"  tableF n={n}: {mem/1e6:.1f} MB, build {build:.2f}s, "
+              f"{query*1e3:.3f} ms/query")
+    write_csv(RESULTS / "tableF_scaling.csv",
+              ["support_size", "memory_MB", "KB_per_query", "build_s",
+               "build_ms_per_row", "query_ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

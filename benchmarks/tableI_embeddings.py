@@ -1,0 +1,38 @@
+"""Table I.1: embedding-model ablation — BERT-like (768-d) vs SFR-like
+(4096-d, higher SNR) embeddings of the same queries; rankings should be
+stable across embedding spaces."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import eval as E
+from repro.data.routing_bench import routerbench_tasks
+from repro.data.synthetic import embedding_variant
+
+from .common import RESULTS, bench_router, routers_from_env, write_csv
+
+
+def run(seed: int = 0):
+    tasks = routerbench_tasks()
+    router_names = routers_from_env(
+        ["knn10", "knn100", "linear", "mlp", "graph10", "attn10"])
+    rows = []
+    for emb_name, transform in [
+            ("bert-768", None),
+            ("sfr-4096", lambda ds: embedding_variant(ds, 4096, 0.01))]:
+        for rn in router_names:
+            vals = []
+            for tname, ds0 in tasks.items():
+                ds = transform(ds0) if transform else ds0
+                r = bench_router(rn).fit(ds, seed=seed)
+                vals.append(E.utility_auc(r, ds)["auc"])
+            avg = round(float(np.mean(vals)), 2)
+            rows.append([emb_name, rn] + [round(v, 2) for v in vals] + [avg])
+            print(f"  tableI {emb_name} {rn}: avg={avg}")
+    write_csv(RESULTS / "tableI_embeddings.csv",
+              ["embedding", "router"] + list(tasks) + ["avg"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Mesh-sharded exact kNN demo: the paper's retrieval primitive scaled across
+a (virtual) device mesh — support rows sharded over every device, per-device
+fused top-k, one tiny all-gather to merge.
+
+This script MUST set the device-count flag before importing jax, so run it
+directly:
+
+  PYTHONPATH=src python examples/distributed_knn.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharded_knn import sharded_knn_topk
+from repro.kernels.knn_topk.ref import knn_topk_reference
+from repro.launch.mesh import make_debug_mesh
+
+
+def main():
+    mesh = make_debug_mesh(2, 4)
+    print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+
+    key = jax.random.PRNGKey(0)
+    n, d, q, k = 100_000, 256, 32, 100
+    support = jax.random.normal(key, (n, d))
+    queries = jax.random.normal(jax.random.fold_in(key, 1), (q, d))
+    queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+
+    t0 = time.time()
+    sc, ix = sharded_knn_topk(queries, support, k, mesh)
+    sc.block_until_ready()
+    print(f"sharded kNN over {n} rows: {time.time() - t0:.2f}s "
+          f"(includes compile)")
+
+    sc_ref, _ = knn_topk_reference(queries, support, k)
+    err = float(jnp.max(jnp.abs(sc - sc_ref)))
+    print(f"max |sharded - single-device| similarity error: {err:.2e}")
+    assert err < 1e-4
+    print("distributed kNN == single-device kNN (exact retrieval preserved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: generate a routing benchmark, fit the paper's kNN router,
+evaluate the full cost-performance Pareto AUC, run the practitioner
+diagnostics, and train a reduced pool model for a few steps.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import eval as E
+from repro.core.diagnostics import locality_check, twonn_intrinsic_dim
+from repro.core.routers import make_router
+from repro.data.routing_bench import routerbench_combined
+
+
+def main():
+    # 1) a standardized routing benchmark (11-model RouterBench pool)
+    ds = routerbench_combined()
+    print(f"benchmark: {ds.name}  N={len(ds.embeddings)}  M={ds.n_models}")
+
+    # 2) the paper's diagnostics: should kNN work here?
+    loc = locality_check(ds.embeddings, ds.scores)
+    print(f"locality check: pearson r = {loc['pearson_r']:.3f} "
+          f"(strongly negative => kNN-friendly)")
+    print(f"TwoNN intrinsic dim = {twonn_intrinsic_dim(ds.embeddings):.1f} "
+          f"(ambient {ds.dim})")
+
+    # 3) routers: simple beats complex
+    print(f"oracle AUC = {E.oracle_auc(ds)['auc']:.2f}   "
+          f"random AUC = {E.random_auc(ds)['auc']:.2f}")
+    for name in ("knn10", "knn100", "linear"):
+        r = make_router(name).fit(ds)
+        print(f"{name:8s} AUC = {E.utility_auc(r, ds)['auc']:.2f}")
+
+    # 4) train a reduced pool model for a few steps (full substrate)
+    from repro.launch.train import main as train_main
+    train_main(["--arch", "h2o-danube-1.8b", "--reduced", "--steps", "5",
+                "--batch", "2", "--seq", "64"])
+
+
+if __name__ == "__main__":
+    main()

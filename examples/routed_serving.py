@@ -1,0 +1,16 @@
+"""End-to-end routed serving: a pool of three architectures (dense, SSM,
+SWA-dense), the kNN router as the front door, continuous-batching engines,
+per-query confidence diagnostics with fallback.
+
+  PYTHONPATH=src python examples/routed_serving.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--pool", "qwen3-4b", "mamba2-370m", "h2o-danube-1.8b",
+                "--requests", "10", "--max-new", "5", "--lam", "1.0"])
+
+
+if __name__ == "__main__":
+    main()

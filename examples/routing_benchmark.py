@@ -1,0 +1,39 @@
+"""Reproduce a mini Table 2: all twelve routers on one text benchmark +
+oracle/random anchors, with the OOD robustness check (Table 4 protocol).
+
+  PYTHONPATH=src python examples/routing_benchmark.py
+"""
+import os
+
+os.environ.setdefault("REPRO_BENCH_SCALE", "0.2")   # keep the demo quick
+
+import numpy as np
+
+from repro.core import eval as E
+from repro.data.routing_bench import routerbench_tasks
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import bench_router  # noqa: E402
+
+ROUTERS = ["knn10", "knn100", "linear", "linear_mf", "mlp", "mlp_mf",
+           "graph10", "attn10", "dattn10"]
+
+
+def main():
+    tasks = routerbench_tasks()
+    ds, ood_ds = tasks["arcc"], tasks["mmlu"]
+    print(f"== {ds.name} ==")
+    print(f"{'Oracle':12s} AUC={E.oracle_auc(ds)['auc']:6.2f}")
+    print(f"{'Random':12s} AUC={E.random_auc(ds)['auc']:6.2f}")
+    for rn in ROUTERS:
+        r = bench_router(rn).fit(ds)
+        auc = E.utility_auc(r, ds)["auc"]
+        ood = ds.with_ood_test(ood_ds)
+        auc_ood = E.utility_auc(r, ood)["auc"]
+        print(f"{rn:12s} AUC={auc:6.2f}  OOD(mmlu)={auc_ood:6.2f}  "
+              f"delta={auc - auc_ood:5.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Merge complex-router benchmark rows (results_complex/) into results/."""
+import csv
+from pathlib import Path
+
+MERGE = ["table2_text_auc.csv", "table3_latency.csv", "table4_ood.csv",
+         "table5_vlm_auc.csv"]
+
+for name in MERGE:
+    base = Path("results") / name
+    extra = Path("results_complex") / name
+    if not (base.exists() and extra.exists()):
+        print(f"skip {name}")
+        continue
+    rows = list(csv.reader(open(base)))
+    have = {r[0] for r in rows}
+    added = 0
+    for r in list(csv.reader(open(extra)))[1:]:
+        if r[0] not in have and r[0] not in ("Oracle", "Random"):
+            rows.append(r)
+            added += 1
+    with open(base, "w", newline="") as f:
+        csv.writer(f).writerows(rows)
+    print(f"{name}: +{added} rows")

@@ -1,0 +1,29 @@
+"""Architecture registry: the ten assigned architectures + input shapes."""
+from .base import (INPUT_SHAPES, LONG_500K, DECODE_32K, PREFILL_32K, TRAIN_4K,
+                   ModelConfig, ShapeConfig, reduced)
+
+from . import (h2o_danube_1_8b, qwen3_4b, llama4_maverick_400b_a17b,
+               internvl2_76b, mamba2_370m, seamless_m4t_medium,
+               deepseek_v2_236b, qwen1_5_32b, starcoder2_15b, zamba2_7b)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (h2o_danube_1_8b, qwen3_4b, llama4_maverick_400b_a17b,
+              internvl2_76b, mamba2_370m, seamless_m4t_medium,
+              deepseek_v2_236b, qwen1_5_32b, starcoder2_15b, zamba2_7b)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+__all__ = ["ARCHS", "INPUT_SHAPES", "ModelConfig", "ShapeConfig",
+           "get_config", "get_shape", "reduced",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K"]

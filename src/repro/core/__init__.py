@@ -1,0 +1,4 @@
+"""The paper's contribution: routers, evaluation protocol, diagnostics, and
+the mesh-sharded kNN primitive."""
+from . import diagnostics, eval as evaluation, routers, sharded_knn  # noqa: F401
+from .dataset import RoutingDataset  # noqa: F401

@@ -1,0 +1,61 @@
+"""Router registry: all methods of Table 2/5."""
+from .base import Router
+from .knn import KNNRouter
+from .linear import LinearRouter
+from .mf import LinearMFRouter, MLPMFRouter
+from .mlp import MLPRouter
+from .graph import GraphRouter
+from .attentive import AttentiveRouter, DoubleAttentiveRouter
+from .bandit import LinUCBRouter
+
+REGISTRY = {
+    "knn10": lambda: KNNRouter(k=10),
+    "knn100": lambda: KNNRouter(k=100),
+    "linear": lambda: LinearRouter(),
+    "linear_mf": lambda: LinearMFRouter(),
+    "mlp": lambda: MLPRouter(),
+    "mlp_mf": lambda: MLPMFRouter(),
+    "graph10": lambda: GraphRouter(k=10),
+    "graph100": lambda: GraphRouter(k=100),
+    "attn10": lambda: AttentiveRouter(k=10),
+    "attn100": lambda: AttentiveRouter(k=100),
+    "dattn10": lambda: DoubleAttentiveRouter(k=10),
+    "dattn100": lambda: DoubleAttentiveRouter(k=100),
+    "linucb": lambda: LinUCBRouter(),
+}
+
+PAPER_ORDER = ["knn10", "knn100", "linear", "linear_mf", "mlp", "mlp_mf",
+               "graph10", "graph100", "attn10", "attn100", "dattn10",
+               "dattn100"]
+
+
+def make_router(name: str, **kw) -> Router:
+    return REGISTRY[name]() if not kw else _make_kw(name, **kw)
+
+
+def _make_kw(name, **kw):
+    from . import knn, linear, mf, mlp, graph, attentive
+    classes = {
+        "knn10": (knn.KNNRouter, {"k": 10}), "knn100": (knn.KNNRouter, {"k": 100}),
+        "linear": (linear.LinearRouter, {}),
+        "linear_mf": (mf.LinearMFRouter, {}), "mlp": (mlp.MLPRouter, {}),
+        "mlp_mf": (mf.MLPMFRouter, {}),
+        "graph10": (graph.GraphRouter, {"k": 10}),
+        "graph100": (graph.GraphRouter, {"k": 100}),
+        "attn10": (attentive.AttentiveRouter, {"k": 10}),
+        "attn100": (attentive.AttentiveRouter, {"k": 100}),
+        "dattn10": (attentive.DoubleAttentiveRouter, {"k": 10}),
+        "dattn100": (attentive.DoubleAttentiveRouter, {"k": 100}),
+        "linucb": (__import__("repro.core.routers.bandit",
+                              fromlist=["LinUCBRouter"]).LinUCBRouter, {}),
+    }
+    cls, base = classes[name]
+    base = dict(base)
+    base.update(kw)
+    return cls(**base)
+
+
+__all__ = ["Router", "KNNRouter", "LinearRouter", "LinearMFRouter",
+           "MLPMFRouter", "MLPRouter", "GraphRouter", "AttentiveRouter",
+           "DoubleAttentiveRouter", "LinUCBRouter", "REGISTRY",
+           "PAPER_ORDER", "make_router"]

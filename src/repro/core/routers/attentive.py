@@ -1,0 +1,119 @@
+"""Attentive routers (§5, C.2): Conditional-Neural-Process style.
+
+AttentiveRouter: per model, self-attention over the k-neighbour support set
+(prompt-embedding + score + cost tokens) followed by cross-attention from the
+target prompt; MLP heads predict (s, c).
+
+DoubleAttentiveRouter: additionally attends across the model axis so the
+representation captures cross-model structure (support is a
+(models x examples) tensor processed by two sequential attentions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.knn_topk.ops import knn_topk
+from ..dataset import RoutingDataset
+from .base import Router, normalize_rows
+from . import nn_utils as nn
+
+
+class AttentiveRouter(Router):
+    double = False
+
+    def __init__(self, k: int = 10, hidden: int = 64, n_heads: int = 4,
+                 d_head: int = 32, epochs: int = 40, lr: float = 2e-3,
+                 batch_size: int = 128):
+        self.k, self.hidden = k, hidden
+        self.n_heads, self.d_head = n_heads, d_head
+        self.epochs, self.lr, self.batch_size = epochs, lr, batch_size
+        self.name = ("D-Attn" if self.double else "Attn") + f" (k={k})"
+
+    def _nbrs(self, X, exclude_self=False):
+        q = normalize_rows(X)
+        k = min(self.k + (1 if exclude_self else 0), len(self._X))
+        _, idx = knn_topk(jnp.asarray(q), jnp.asarray(self._X), k)
+        idx = np.asarray(idx)
+        return idx[:, 1:] if exclude_self else idx
+
+    def _init(self, key, D, M):
+        h = self.hidden
+        ks = jax.random.split(key, 7)
+        p = {
+            "tok_in": nn.mlp_params(ks[0], [D + 2, h, h]),
+            "q_proj": nn.linear_init(ks[1], D, h),
+            "self_attn": nn.mha_init(ks[2], h, self.n_heads, self.d_head),
+            "cross_attn": nn.mha_init(ks[3], h, self.n_heads, self.d_head),
+            "head_s": nn.mlp_params(ks[4], [h, h, 1]),
+            "head_c": nn.mlp_params(ks[5], [h, h, 1]),
+        }
+        if self.double:
+            p["model_attn"] = nn.mha_init(ks[6], h, self.n_heads, self.d_head)
+        return p
+
+    def _forward(self, p, xq, nb_x, nb_s, nb_c):
+        """xq (Q,D); nb_x (Q,k,D); nb_s/nb_c (Q,k,M) -> (s, c) (Q,M)."""
+        Q, k, M = nb_s.shape
+        # tokens per (query, model, example)
+        nx = jnp.broadcast_to(nb_x[:, None], (Q, M, k, nb_x.shape[-1]))
+        toks = jnp.concatenate(
+            [nx, nb_s.transpose(0, 2, 1)[..., None],
+             nb_c.transpose(0, 2, 1)[..., None]], axis=-1)
+        z = nn.mlp_apply(p["tok_in"], toks)                    # (Q,M,k,h)
+        z = z + nn.mha(p["self_attn"], z, z, self.n_heads)                   # over examples
+        if self.double:
+            zm = jnp.swapaxes(z, 1, 2)                         # (Q,k,M,h)
+            zm = zm + nn.mha(p["model_attn"], zm, zm, self.n_heads)          # over models
+            z = jnp.swapaxes(zm, 1, 2)
+        q = nn.linear(p["q_proj"], xq)                         # (Q,h)
+        qt = jnp.broadcast_to(q[:, None, None, :], (Q, M, 1, q.shape[-1]))
+        latent = nn.mha(p["cross_attn"], qt, z, self.n_heads)[:, :, 0, :]    # (Q,M,h)
+        s = nn.mlp_apply(p["head_s"], latent)[..., 0]
+        c = nn.mlp_apply(p["head_c"], latent)[..., 0]
+        return s, c
+
+    def fit(self, ds: RoutingDataset, seed: int = 0):
+        X, S, C = ds.part("train")
+        self._X = normalize_rows(X)
+        self._Xraw = X.astype(np.float32)
+        self._S = S.astype(np.float32)
+        self._c_scale = max(float(np.abs(C).max()), 1e-9)
+        self._C = (C / self._c_scale).astype(np.float32)
+        idx = self._nbrs(X, exclude_self=True)
+
+        key = jax.random.PRNGKey(seed)
+        params = self._init(key, ds.dim, ds.n_models)
+        data = {"x": X.astype(np.float32), "nx": self._Xraw[idx],
+                "ns": self._S[idx], "nc": self._C[idx],
+                "s": S.astype(np.float32),
+                "c": (C / self._c_scale).astype(np.float32)}
+
+        def loss_fn(p, b):
+            s, c = self._forward(p, b["x"], b["nx"], b["ns"], b["nc"])
+            return jnp.mean((s - b["s"]) ** 2) + jnp.mean((c - b["c"]) ** 2)
+
+        self._params, _ = nn.train(params, loss_fn, data, epochs=self.epochs,
+                                   lr=self.lr, batch_size=self.batch_size,
+                                   seed=seed)
+        return self
+
+    def predict_utility(self, X: np.ndarray):
+        idx = self._nbrs(X)
+        outs_s, outs_c = [], []
+        bs = 256
+        for i in range(0, len(X), bs):
+            sl = slice(i, i + bs)
+            s, c = self._forward(self._params,
+                                 jnp.asarray(X[sl], jnp.float32),
+                                 jnp.asarray(self._Xraw[idx[sl]]),
+                                 jnp.asarray(self._S[idx[sl]]),
+                                 jnp.asarray(self._C[idx[sl]]))
+            outs_s.append(np.asarray(s))
+            outs_c.append(np.asarray(c))
+        return np.concatenate(outs_s), np.concatenate(outs_c) * self._c_scale
+
+
+class DoubleAttentiveRouter(AttentiveRouter):
+    double = True

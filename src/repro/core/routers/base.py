@@ -1,0 +1,49 @@
+"""Router API.  Every router supports the paper's two formulations:
+
+  * utility prediction — ``predict_utility(X) -> (s_hat, c_hat)``; routing
+    selects ``argmax_m s_hat - lam * c_hat`` over any lambda grid (this is
+    what traces the full Pareto front, §4.3);
+  * model selection — ``fit_selection(ds, lam)`` + ``select(X)``; trained
+    against gold labels derived at a fixed lambda.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..dataset import RoutingDataset
+
+
+def normalize_rows(X: np.ndarray) -> np.ndarray:
+    n = np.linalg.norm(X, axis=1, keepdims=True)
+    return (X / np.maximum(n, 1e-12)).astype(np.float32)
+
+
+def gold_labels(scores: np.ndarray, costs: np.ndarray, lam: float) -> np.ndarray:
+    """argmax_m s - lam*c per query (selection-formulation training signal)."""
+    return np.argmax(scores - lam * costs, axis=1)
+
+
+class Router:
+    name = "base"
+    is_parametric = True
+
+    # ---- utility formulation ----
+    def fit(self, ds: RoutingDataset, seed: int = 0) -> "Router":
+        raise NotImplementedError
+
+    def predict_utility(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """X: (Q, D) raw embeddings -> (s_hat (Q, M), c_hat (Q, M))."""
+        raise NotImplementedError
+
+    # ---- selection formulation ----
+    def fit_selection(self, ds: RoutingDataset, lam: float,
+                      seed: int = 0) -> "Router":
+        """Default: reuse the utility fit; selection = utility argmax."""
+        self._sel_lam = lam
+        return self.fit(ds, seed=seed)
+
+    def select(self, X: np.ndarray) -> np.ndarray:
+        s, c = self.predict_utility(X)
+        return np.argmax(s - self._sel_lam * c, axis=1)

@@ -1,0 +1,106 @@
+"""Graph router (§5, GraphRouter-style): bipartite query/model graph over the
+query's k-nearest support neighbourhood.  Two rounds of message passing:
+edge features (observed neighbour scores/costs) -> model nodes -> query node,
+then an MLP head predicts the (s, c) of every (query, model) edge.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.knn_topk.ops import knn_topk
+from ..dataset import RoutingDataset
+from .base import Router, normalize_rows
+from . import nn_utils as nn
+
+
+class GraphRouter(Router):
+    def __init__(self, k: int = 10, hidden: int = 64, epochs: int = 60,
+                 lr: float = 2e-3, batch_size: int = 128):
+        self.k, self.hidden = k, hidden
+        self.epochs, self.lr, self.batch_size = epochs, lr, batch_size
+        self.name = f"Graph (k={k})"
+
+    # ---- neighbour machinery ----
+    def _nbrs(self, X, exclude_self=False):
+        q = normalize_rows(X)
+        k = min(self.k + (1 if exclude_self else 0), len(self._X))
+        _, idx = knn_topk(jnp.asarray(q), jnp.asarray(self._X), k)
+        idx = np.asarray(idx)
+        if exclude_self:
+            idx = idx[:, 1:]
+        return idx
+
+    def _init(self, key, D, M):
+        h = self.hidden
+        ks = jax.random.split(key, 6)
+        return {
+            "emb_m": jax.random.normal(ks[0], (M, h)) * 0.1,
+            "proj": nn.linear_init(ks[1], D, h),
+            "edge": nn.mlp_params(ks[2], [h + 2, h, h]),
+            "upd_m": nn.mlp_params(ks[3], [2 * h, h]),
+            "upd_q": nn.mlp_params(ks[4], [2 * h, h]),
+            "head": nn.mlp_params(ks[5], [2 * h, h, 2]),
+        }
+
+    @staticmethod
+    def _forward(p, xq, nb_x, nb_s, nb_c):
+        """xq (Q,D); nb_x (Q,k,D); nb_s/nb_c (Q,k,M) -> (s,c) (Q,M)."""
+        Q, k, M = nb_s.shape
+        hq = jax.nn.relu(nn.linear(p["proj"], xq))              # (Q,h)
+        hn = jax.nn.relu(nn.linear(p["proj"], nb_x))            # (Q,k,h)
+        h = hq.shape[-1]
+        hn_b = jnp.broadcast_to(hn[:, :, None, :], (Q, k, M, h))
+        ef = jnp.concatenate([hn_b, nb_s[..., None], nb_c[..., None]], -1)
+        msg = nn.mlp_apply(p["edge"], ef).mean(axis=1)          # (Q,M,h)
+        em = jnp.broadcast_to(p["emb_m"][None], (Q, M, h))
+        hm = jax.nn.relu(nn.mlp_apply(p["upd_m"],
+                                      jnp.concatenate([em, msg], -1)))
+        hq2 = jax.nn.relu(nn.mlp_apply(
+            p["upd_q"], jnp.concatenate([hq, hm.mean(axis=1)], -1)))
+        hq_b = jnp.broadcast_to(hq2[:, None, :], (Q, M, h))
+        out = nn.mlp_apply(p["head"], jnp.concatenate([hq_b, hm], -1))
+        return out[..., 0], out[..., 1]
+
+    def fit(self, ds: RoutingDataset, seed: int = 0):
+        X, S, C = ds.part("train")
+        self._X = normalize_rows(X)
+        self._S = S.astype(np.float32)
+        self._c_scale = max(float(np.abs(C).max()), 1e-9)
+        self._C = (C / self._c_scale).astype(np.float32)
+        self._Xraw = X.astype(np.float32)
+        idx = self._nbrs(X, exclude_self=True)
+
+        key = jax.random.PRNGKey(seed)
+        params = self._init(key, ds.dim, ds.n_models)
+        data = {"x": X.astype(np.float32), "nx": self._Xraw[idx],
+                "ns": self._S[idx], "nc": self._C[idx],
+                "s": S.astype(np.float32), "c": self._C_target(C)}
+
+        def loss_fn(p, b):
+            s, c = self._forward(p, b["x"], b["nx"], b["ns"], b["nc"])
+            return jnp.mean((s - b["s"]) ** 2) + jnp.mean((c - b["c"]) ** 2)
+
+        self._params, _ = nn.train(params, loss_fn, data, epochs=self.epochs,
+                                   lr=self.lr, batch_size=self.batch_size,
+                                   seed=seed)
+        return self
+
+    def _C_target(self, C):
+        return (C / self._c_scale).astype(np.float32)
+
+    def predict_utility(self, X: np.ndarray):
+        idx = self._nbrs(X)
+        outs_s, outs_c = [], []
+        bs = 512
+        for i in range(0, len(X), bs):
+            sl = slice(i, i + bs)
+            s, c = self._forward(self._params,
+                                 jnp.asarray(X[sl], jnp.float32),
+                                 jnp.asarray(self._Xraw[idx[sl]]),
+                                 jnp.asarray(self._S[idx[sl]]),
+                                 jnp.asarray(self._C[idx[sl]]))
+            outs_s.append(np.asarray(s))
+            outs_c.append(np.asarray(c))
+        return np.concatenate(outs_s), np.concatenate(outs_c) * self._c_scale

@@ -1,0 +1,94 @@
+"""The paper's protagonist: k-Nearest-Neighbour router (§5, C.2).
+
+Utility prediction:  s_hat(x,m) = mean over k nearest support rows of s(xi,m)
+(optionally similarity-softmax weighted); identically for costs.
+Model selection:     majority vote among the neighbours' utility-optimal
+models at the given lambda.
+
+Retrieval runs through the fused Pallas kNN kernel (`repro.kernels.knn_topk`)
+— interpret-mode on CPU, compiled on TPU — or, when a mesh is supplied, the
+mesh-sharded exact kNN (`repro.core.sharded_knn`): the support set is
+row-sharded across all devices and per-device top-k results are merged with
+one tiny all-gather.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.knn_topk.ops import knn_topk
+from ..dataset import RoutingDataset
+from .base import Router, gold_labels, normalize_rows
+
+
+class KNNRouter(Router):
+    is_parametric = False
+
+    def __init__(self, k: int = 100, weights: str = "uniform",
+                 use_pallas: bool = False, temperature: float = 20.0,
+                 mesh=None):
+        self.k = k
+        self.weights = weights
+        self.use_pallas = use_pallas
+        self.temperature = temperature
+        self.mesh = mesh
+        self.name = f"kNN (k={k})"
+
+    # ---- fit = store the support set (no training) ----
+    def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
+        X, S, C = ds.part("train")
+        self._X = normalize_rows(X)
+        self._S = S.astype(np.float32)
+        self._C = C.astype(np.float32)
+        return self
+
+    def _neighbors(self, X: np.ndarray):
+        q = normalize_rows(X)
+        k = min(self.k, len(self._X))
+        if self.mesh is not None:
+            from ..sharded_knn import sharded_knn_topk
+            sims, idx = sharded_knn_topk(jnp.asarray(q), jnp.asarray(self._X),
+                                         k, self.mesh)
+        else:
+            sims, idx = knn_topk(jnp.asarray(q), jnp.asarray(self._X), k,
+                                 use_pallas=self.use_pallas)
+        return np.asarray(sims), np.asarray(idx)
+
+    # ---- utility ----
+    def predict_utility(self, X: np.ndarray):
+        sims, idx = self._neighbors(X)
+        s_nb = self._S[idx]                     # (Q, k, M)
+        c_nb = self._C[idx]
+        if self.weights == "softmax":
+            w = np.exp(self.temperature * (sims - sims.max(1, keepdims=True)))
+            w /= w.sum(1, keepdims=True)
+            s_hat = np.einsum("qk,qkm->qm", w, s_nb)
+            c_hat = np.einsum("qk,qkm->qm", w, c_nb)
+        else:
+            s_hat = s_nb.mean(axis=1)
+            c_hat = c_nb.mean(axis=1)
+        return s_hat, c_hat
+
+    # ---- selection: neighbour majority vote ----
+    def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
+        self.fit(ds, seed=seed)
+        X, S, C = ds.part("train")
+        self._train_best = gold_labels(S, C, lam)
+        return self
+
+    def select(self, X: np.ndarray) -> np.ndarray:
+        _, idx = self._neighbors(X)
+        votes = self._train_best[idx]           # (Q, k)
+        M = self._S.shape[1]
+        counts = np.stack([(votes == m).sum(1) for m in range(M)], axis=1)
+        return np.argmax(counts, axis=1)
+
+    # ---- practitioner diagnostics (§8): per-query confidence ----
+    def confidence(self, X: np.ndarray):
+        """Returns (kth_sim, neighbour_agreement) per query: low kth-neighbour
+        similarity => sparse coverage; low agreement => uncertainty."""
+        sims, idx = self._neighbors(X)
+        kth = sims[:, -1]
+        best = np.argmax(self._S[idx] - 0.0 * self._C[idx], axis=2)  # (Q,k)
+        mode_frac = np.array([np.bincount(b).max() / len(b) for b in best])
+        return kth, mode_frac

@@ -1,0 +1,63 @@
+"""Linear routers (§5, C.2).
+
+Utility: per-model ridge regression over embeddings (closed form — exact,
+deterministic, and the honest 'simplest parametric baseline').
+Selection: multinomial logistic regression trained with Adam.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dataset import RoutingDataset
+from .base import Router, gold_labels
+from . import nn_utils as nn
+
+
+def _ridge(X, Y, reg=1e-2):
+    """X: (N, D); Y: (N, M) -> (W (D+1, M)) with bias row appended."""
+    Xb = np.concatenate([X, np.ones((len(X), 1), np.float32)], axis=1)
+    A = Xb.T @ Xb + reg * np.eye(Xb.shape[1], dtype=np.float32)
+    B = Xb.T @ Y
+    return np.linalg.solve(A, B).astype(np.float32)
+
+
+class LinearRouter(Router):
+    name = "Linear"
+
+    def __init__(self, reg: float = 1e-2):
+        self.reg = reg
+
+    def fit(self, ds: RoutingDataset, seed: int = 0):
+        X, S, C = ds.part("train")
+        self._Ws = _ridge(X, S, self.reg)
+        self._Wc = _ridge(X, C, self.reg)
+        return self
+
+    def predict_utility(self, X: np.ndarray):
+        Xb = np.concatenate([X, np.ones((len(X), 1), np.float32)], axis=1)
+        return Xb @ self._Ws, Xb @ self._Wc
+
+    # ---- selection: multinomial logistic regression ----
+    def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
+        X, S, C = ds.part("train")
+        y = gold_labels(S, C, lam)
+        M = ds.n_models
+        key = jax.random.PRNGKey(seed)
+        params = nn.linear_init(key, X.shape[1], M)
+
+        def loss_fn(p, batch):
+            logits = nn.linear(p, batch["x"])
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(
+                logp, batch["y"][:, None], axis=1))
+
+        self._sel_params, _ = nn.train(
+            params, loss_fn, {"x": X.astype(np.float32), "y": y},
+            epochs=60, lr=5e-3, seed=seed)
+        return self
+
+    def select(self, X: np.ndarray) -> np.ndarray:
+        logits = nn.linear(self._sel_params, jnp.asarray(X, jnp.float32))
+        return np.asarray(jnp.argmax(logits, axis=1))

@@ -1,0 +1,88 @@
+"""Matrix-factorization routers (C.2): learnable model embeddings interacting
+with the query embedding, linear (RouteLLM-style bilinear) or through an MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dataset import RoutingDataset
+from .base import Router, gold_labels
+from . import nn_utils as nn
+
+
+class LinearMFRouter(Router):
+    name = "Linear (MF)"
+
+    def __init__(self, d_m: int = 128, epochs: int = 120, lr: float = 2e-3):
+        self.d_m, self.epochs, self.lr = d_m, epochs, lr
+
+    def _init(self, key, D, M):
+        ks = jax.random.split(key, 4)
+        return {
+            "emb_m": jax.random.normal(ks[0], (M, self.d_m)) * 0.1,
+            "Ws": jax.random.normal(ks[1], (D, self.d_m)) / np.sqrt(D),
+            "Wc": jax.random.normal(ks[2], (D, self.d_m)) / np.sqrt(D),
+            "bs": jnp.zeros((M,)), "bc": jnp.zeros((M,)),
+        }
+
+    @staticmethod
+    def _predict(p, x):
+        s = (x @ p["Ws"]) @ p["emb_m"].T + p["bs"]
+        c = (x @ p["Wc"]) @ p["emb_m"].T + p["bc"]
+        return s, c
+
+    def fit(self, ds: RoutingDataset, seed: int = 0):
+        X, S, C = ds.part("train")
+        key = jax.random.PRNGKey(seed)
+        params = self._init(key, ds.dim, ds.n_models)
+
+        # scale-balance cost targets (costs can be tiny in absolute $)
+        self._c_scale = max(float(np.abs(C).max()), 1e-9)
+        Cn = C / self._c_scale
+
+        def loss_fn(p, b):
+            s, c = self._predict(p, b["x"])
+            return jnp.mean((s - b["s"]) ** 2) + jnp.mean((c - b["c"]) ** 2)
+
+        self._params, _ = nn.train(params, loss_fn,
+                                   {"x": X, "s": S, "c": Cn},
+                                   epochs=self.epochs, lr=self.lr, seed=seed)
+        return self
+
+    def predict_utility(self, X: np.ndarray):
+        s, c = self._predict(self._params, jnp.asarray(X, jnp.float32))
+        return np.asarray(s), np.asarray(c) * self._c_scale
+
+
+class MLPMFRouter(LinearMFRouter):
+    name = "MLP (MF)"
+
+    def __init__(self, d_m: int = 128, hidden: int = 100, epochs: int = 120,
+                 lr: float = 2e-3):
+        super().__init__(d_m=d_m, epochs=epochs, lr=lr)
+        self.hidden = hidden
+
+    def _init(self, key, D, M):
+        ks = jax.random.split(key, 4)
+        return {
+            "emb_m": jax.random.normal(ks[0], (M, self.d_m)) * 0.1,
+            "proj": nn.linear_init(ks[1], D, self.d_m),
+            "mlp_s": nn.mlp_params(ks[2], [2 * self.d_m, self.hidden,
+                                           self.hidden, 1]),
+            "mlp_c": nn.mlp_params(ks[3], [2 * self.d_m, self.hidden,
+                                           self.hidden, 1]),
+        }
+
+    @staticmethod
+    def _predict(p, x):
+        q = nn.linear(p["proj"], x)                       # (Q, dm)
+        M = p["emb_m"].shape[0]
+        qe = jnp.broadcast_to(q[:, None, :], (q.shape[0], M, q.shape[1]))
+        me = jnp.broadcast_to(p["emb_m"][None], (q.shape[0], M,
+                                                 p["emb_m"].shape[1]))
+        z = jnp.concatenate([qe, me], axis=-1)            # (Q, M, 2dm)
+        s = nn.mlp_apply(p["mlp_s"], z)[..., 0]
+        c = nn.mlp_apply(p["mlp_c"], z)[..., 0]
+        return s, c

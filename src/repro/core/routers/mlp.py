@@ -1,0 +1,68 @@
+"""MLP router (C.2): 3 FC layers, hidden width 100, ReLU; two heads emit the
+per-model score and cost vectors (shared trunk with per-model output units —
+parameter-equivalent to the paper's per-model heads)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dataset import RoutingDataset
+from .base import Router, gold_labels
+from . import nn_utils as nn
+
+
+class MLPRouter(Router):
+    name = "MLP"
+
+    def __init__(self, hidden: int = 100, epochs: int = 120, lr: float = 2e-3):
+        self.hidden, self.epochs, self.lr = hidden, epochs, lr
+
+    def fit(self, ds: RoutingDataset, seed: int = 0):
+        X, S, C = ds.part("train")
+        M = ds.n_models
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 2)
+        params = {
+            "mlp_s": nn.mlp_params(ks[0], [ds.dim, self.hidden, self.hidden, M]),
+            "mlp_c": nn.mlp_params(ks[1], [ds.dim, self.hidden, self.hidden, M]),
+        }
+        self._c_scale = max(float(np.abs(C).max()), 1e-9)
+        Cn = C / self._c_scale
+
+        def loss_fn(p, b):
+            s = nn.mlp_apply(p["mlp_s"], b["x"])
+            c = nn.mlp_apply(p["mlp_c"], b["x"])
+            return jnp.mean((s - b["s"]) ** 2) + jnp.mean((c - b["c"]) ** 2)
+
+        self._params, _ = nn.train(params, loss_fn, {"x": X, "s": S, "c": Cn},
+                                   epochs=self.epochs, lr=self.lr, seed=seed)
+        return self
+
+    def predict_utility(self, X: np.ndarray):
+        x = jnp.asarray(X, jnp.float32)
+        s = nn.mlp_apply(self._params["mlp_s"], x)
+        c = nn.mlp_apply(self._params["mlp_c"], x)
+        return np.asarray(s), np.asarray(c) * self._c_scale
+
+    # ---- selection ----
+    def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
+        X, S, C = ds.part("train")
+        y = gold_labels(S, C, lam)
+        key = jax.random.PRNGKey(seed)
+        params = {"mlp": nn.mlp_params(key, [ds.dim, self.hidden, self.hidden,
+                                             ds.n_models])}
+
+        def loss_fn(p, b):
+            logits = nn.mlp_apply(p["mlp"], b["x"])
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, b["y"][:, None], 1))
+
+        self._sel_params, _ = nn.train(params, loss_fn, {"x": X, "y": y},
+                                       epochs=60, lr=3e-3, seed=seed)
+        return self
+
+    def select(self, X: np.ndarray) -> np.ndarray:
+        logits = nn.mlp_apply(self._sel_params["mlp"],
+                              jnp.asarray(X, jnp.float32))
+        return np.asarray(jnp.argmax(logits, axis=1))

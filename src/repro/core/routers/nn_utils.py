@@ -1,0 +1,97 @@
+"""Shared bits for the learned routers: tiny-net initializers, multi-head
+attention, and a generic minibatch-Adam trainer (pure JAX; reuses the
+framework optimizer so router training shards like model training would)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import optimizer as opt_mod
+
+
+def linear_init(key, din, dout, scale=None):
+    std = scale if scale is not None else 1.0 / np.sqrt(din)
+    w = jax.random.normal(key, (din, dout), jnp.float32) * std
+    return {"w": w, "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def mlp_params(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [linear_init(k, a, b) for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp_apply(ps, x, act=jax.nn.relu):
+    for i, p in enumerate(ps):
+        x = linear(p, x)
+        if i < len(ps) - 1:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# multi-head attention over generic token axes
+# ---------------------------------------------------------------------------
+
+def mha_init(key, d_model, n_heads=4, d_head=32):
+    ks = jax.random.split(key, 4)
+    h = n_heads * d_head
+    return {
+        "wq": linear_init(ks[0], d_model, h),
+        "wk": linear_init(ks[1], d_model, h),
+        "wv": linear_init(ks[2], d_model, h),
+        "wo": linear_init(ks[3], h, d_model),
+    }
+
+
+def mha(p, q_in, kv_in, nh: int = 4):
+    """q_in: (..., Tq, D); kv_in: (..., Tk, D)."""
+    q = linear(p["wq"], q_in)
+    k = linear(p["wk"], kv_in)
+    v = linear(p["wv"], kv_in)
+    dh = q.shape[-1] // nh
+    def split(x):
+        return x.reshape(x.shape[:-1] + (nh, dh))
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("...qhd,...khd->...hqk", qh, kh) / np.sqrt(dh)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("...hqk,...khd->...qhd", probs, vh)
+    out = out.reshape(out.shape[:-2] + (nh * dh,))
+    return linear(p["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# generic trainer
+# ---------------------------------------------------------------------------
+
+def train(params, loss_fn: Callable, data: Dict[str, np.ndarray], *,
+          epochs=100, batch_size=256, lr=1e-3, seed=0, weight_decay=0.01):
+    """loss_fn(params, batch_dict) -> scalar.  Full shuffle each epoch."""
+    n = len(next(iter(data.values())))
+    opt_cfg = opt_mod.OptConfig(lr=lr, warmup_steps=5,
+                                total_steps=max(1, epochs * max(n // batch_size, 1)),
+                                weight_decay=weight_decay, clip_norm=1.0)
+    state = opt_mod.init(params)
+    data_j = {k: jnp.asarray(v) for k, v in data.items()}
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, state, _ = opt_mod.update(opt_cfg, grads, state, params)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    last = None
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n, batch_size):
+            sl = perm[i: i + batch_size]
+            batch = {k: v[sl] for k, v in data_j.items()}
+            params, state, last = step(params, state, batch)
+    return params, float(last) if last is not None else None

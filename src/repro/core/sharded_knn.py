@@ -1,0 +1,79 @@
+"""Mesh-sharded exact kNN — the paper's retrieval step as a first-class
+distributed primitive.
+
+The support set is row-sharded across EVERY device of the mesh (all axes
+flattened); each device runs the fused Pallas/ref top-k over its shard; the
+per-device (k scores, k global indices) are all-gathered (devices x k x 8B —
+a tiny collective) and merged locally.  Compute scales linearly with devices;
+communication is O(devices * k) regardless of support size, which is the
+TPU-native answer to the paper's "kNN is fast" claim at cluster scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.kernels.knn_topk.ops import knn_topk
+from repro.kernels.knn_topk.ref import knn_topk_reference
+
+
+def pad_support(support: jnp.ndarray, n_shards: int):
+    n = support.shape[0]
+    pad = (-n) % n_shards
+    if pad:
+        support = jnp.pad(support, ((0, pad), (0, 0)))
+    return support, n
+
+
+def sharded_knn_topk(queries, support, k: int, mesh: Mesh,
+                     use_pallas: bool = False, k_local: int = 0):
+    """queries (Q, D) L2-normalized, replicated; support (N, D) row-sharded
+    over all mesh axes.  Returns (scores (Q, k), global indices (Q, k)).
+
+    k_local: per-shard candidate count gathered for the merge.  Default (0)
+    uses k — exact retrieval.  Setting k_local < k cuts the all-gather
+    traffic by k/k_local at a bounded recall risk: with rows placed randomly,
+    a shard holds Binomial(k, 1/n_shards) of the global top-k, so e.g.
+    k=100 over 256 shards needs P(X > 8) ≈ 2e-9 per shard — recall@100 stays
+    ~1.0 with a 12.5x smaller collective (validated in tests/benchmarks)."""
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    support, n_valid = pad_support(support, n_shards)
+    rows_per = support.shape[0] // n_shards
+
+    def local(q, s_shard):
+        # flattened shard id from the per-axis indices
+        shard_id = jnp.zeros((), jnp.int32)
+        for a in axes:
+            shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
+        kk = min(k_local or k, rows_per)
+        if use_pallas:
+            sc, ix = knn_topk(q, s_shard[0], kk, use_pallas=True)
+        else:
+            sc, ix = knn_topk_reference(q, s_shard[0], kk)
+        gix = ix + shard_id * rows_per
+        # mask out padding rows
+        sc = jnp.where(gix < n_valid, sc, -jnp.inf)
+        # gather every shard's candidates (tiny: shards x Q x k)
+        all_sc = jax.lax.all_gather(sc, axes, tiled=False)   # (S, Q, kk)
+        all_ix = jax.lax.all_gather(gix, axes, tiled=False)
+        S = all_sc.shape[0]
+        cand_sc = jnp.moveaxis(all_sc, 0, 1).reshape(q.shape[0], S * kk)
+        cand_ix = jnp.moveaxis(all_ix, 0, 1).reshape(q.shape[0], S * kk)
+        top_sc, pos = jax.lax.top_k(cand_sc, k)
+        top_ix = jnp.take_along_axis(cand_ix, pos, axis=1)
+        return top_sc, top_ix
+
+    # support reshaped (n_shards, rows_per, D) so one named sharding covers
+    # arbitrarily many axes
+    sup3 = support.reshape(n_shards, rows_per, support.shape[1])
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(), P(axes, None, None)),
+                   out_specs=(P(), P()), check_rep=False)
+    with mesh:
+        return fn(queries, sup3)

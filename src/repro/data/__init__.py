@@ -1,0 +1,1 @@
+from . import lm_data, prices, routing_bench, synthetic  # noqa: F401

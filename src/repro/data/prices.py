@@ -1,0 +1,130 @@
+"""Model pools and API prices, transcribed verbatim from the paper's
+Appendix B (Tables B.1 and B.2).  Prices are $ per 1M tokens (input, output).
+"""
+
+ALPACAEVAL = {
+    "OpenAI": {
+        "gpt-3.5-turbo-0301": (1.5, 2.0),
+        "gpt-3.5-turbo-0613": (1.5, 2.0),
+        "gpt-3.5-turbo-1106": (1.0, 2.0),
+        "gpt-4-0125-preview": (10, 30),
+        "gpt-4o-2024-05-13": (5, 15),
+        "gpt-4": (30, 60),
+        "gpt-4-0314": (30, 60),
+        "gpt-4-0613": (30, 60),
+        "gpt-4-1106-preview": (10, 30),
+    },
+    "Claude": {
+        "claude-2": (8, 24),
+        "claude-2.1": (8, 24),
+        "claude-3-5-sonnet-20240620": (3, 15),
+        "claude-3-opus-20240229": (15, 75),
+        "claude-3-sonnet-20240229": (3, 15),
+        "claude-instant-1.2": (0.8, 2.4),
+    },
+    "Mistral": {
+        "Mistral-7B-Instruct-v0.2": (0.25, 0.25),
+        "Mixtral-8x22B-Instruct-v0.1": (2, 6),
+        "Mixtral-8x7B-Instruct-v0.1": (0.7, 0.7),
+        "mistral-large-2402": (8, 24),
+        "mistral-medium": (2.7, 8.1),
+    },
+}
+
+OPENLLM = {
+    "Qwen2.5": {
+        "Qwen2.5-0.5B-Instruct": (0.08, 0.08),
+        "Qwen2.5-1.5B-Instruct": (0.2, 0.2),
+        "Qwen2.5-7B-Instruct": (0.3, 0.3),
+        "Qwen2.5-14B-Instruct": (0.8, 0.8),
+        "Qwen2.5-32B-Instruct": (0.8, 0.8),
+        "Qwen2.5-72B-Instruct": (0.9, 0.9),
+    },
+    "LLaMA3": {
+        "Llama-3-8B-Instruct": (0.2, 0.2),
+        "Llama-3-70B-Instruct": (0.9, 0.9),
+    },
+    "Yi1.5": {
+        "Yi-1.5-6B-Chat": (0.3, 0.3),
+        "Yi-1.5-9B-Chat": (0.4, 0.4),
+        "Yi-1.5-34B-Chat": (0.8, 0.8),
+    },
+}
+
+HELM_LITE = {
+    "OpenAI": {
+        "gpt-4o-2024-05-13": (5.0, 15.0),
+        "gpt-4o-mini-2024-07-18": (0.15, 0.6),
+        "gpt-3.5-turbo-0613": (1.5, 2.0),
+        "gpt-4-0613": (30, 60),
+        "gpt-4-turbo-2024-04-09": (10, 30),
+        "gpt-4-1106-preview": (10, 30),
+    },
+    "Claude": {
+        "claude-3-5-sonnet-20240620": (3, 15),
+        "claude-3-opus-20240229": (15, 75),
+        "claude-3-sonnet-20240229": (3, 15),
+        "claude-3-haiku-20240307": (0.25, 1.25),
+        "claude-2": (8, 24),
+        "claude-instant-v1": (0.8, 2.4),
+        "claude-v1.3": (8, 24),
+        "claude-2.1": (8, 24),
+        "claude-instant-1.2": (0.8, 2.4),
+    },
+    "Google": {
+        "gemini-1.0-pro-002": (0.5, 1.5),
+        "gemini-1.0-pro-001": (0.5, 1.5),
+        "gemini-1.5-pro-001": (3.5, 10.5),
+        "gemini-1.5-flash-001": (0.075, 0.3),
+        "text-bison-001": (0.5, 1.5),
+        "text-unicorn-001": (7.0, 21.0),
+        "gemma-2-9b-it": (0.2, 0.2),
+        "gemma-2-27b-it": (0.6, 0.6),
+        "gemma-7b": (0.1, 0.1),
+    },
+}
+
+ROUTERBENCH = {
+    "RouterBench": {
+        "gpt-3.5": (1.0, 2.0),
+        "claude-instant-v1": (0.8, 2.4),
+        "claude-v1": (8.0, 24.0),
+        "claude-v2": (8.0, 24.0),
+        "gpt-4": (10.0, 30.0),
+        "llama-70b": (0.9, 0.9),
+        "Mixtral-8x7B": (0.6, 0.6),
+        "Yi-34B": (0.8, 0.8),
+        "WizardLM-13B": (0.3, 0.3),
+        "code-llama-34B": (0.776, 0.776),
+        "Mistral-7B": (0.2, 0.2),
+    },
+}
+
+VHELM = {
+    "OpenAI": {
+        "gpt-4-turbo-2024-04-09": (10, 30),
+        "gpt-4.1-2025-04-14": (2, 8),
+        "gpt-4.1-mini-2025-04-14": (0.4, 1.6),
+        "gpt-4.1-nano-2025-04-14": (0.1, 0.4),
+        "gpt-4.5-preview-2025-02-27": (75, 150),
+        "gpt-4o-2024-05-13": (5, 15),
+        "gpt-4o-2024-08-06": (2.5, 10),
+        "gpt-4o-2024-11-20": (2.5, 10),
+        "gpt-4o-mini-2024-07-18": (0.15, 0.6),
+        "o1-2024-12-17": (15, 60),
+        "o3-2025-04-16": (10, 40),
+        "o4-mini-2025-04-16": (1.1, 4.4),
+    },
+    "Claude": {
+        "claude-3-5-sonnet-20240620": (3, 15),
+        "claude-3-5-sonnet-20241022": (3, 15),
+        "claude-3-7-sonnet-20250219": (3, 15),
+        "claude-3-7-sonnet-20250219-thinking-64k": (3, 15),
+        "claude-3-haiku-20240307": (0.8, 4),
+        "claude-3-opus-20240229": (15, 75),
+        "claude-3-sonnet-20240229": (3, 15),
+    },
+}
+
+ROUTERBENCH_TASKS = ["arcc", "gsm", "mbpp", "mmlu", "hellaswag", "winogrande"]
+VHELM_TASKS = ["blink", "flickr30k", "mathvista", "mme", "mmmu"]

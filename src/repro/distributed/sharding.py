@@ -1,0 +1,86 @@
+"""Logical-axis sharding rules + a context so model code can annotate
+activations without importing mesh machinery.
+
+Model code calls ``constrain(x, ("batch", "seq", "embed"))``; outside a
+sharding context this is a no-op, inside the dry-run / launcher it becomes a
+``with_sharding_constraint`` against the active rule table.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis -> mesh axes (None = replicated)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "expert": "model",
+    "vocab": "model",
+    "capacity": None,
+    "state": None,
+    "fsdp": ("pod", "data"),
+    "layers": None,
+}
+
+
+def _filter_axes(mesh: Mesh, axes):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def spec_for(mesh: Mesh, logical: Sequence[Optional[str]], rules=None) -> P:
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used = set()
+    for name in logical:
+        ax = None if name is None else _filter_axes(mesh, rules.get(name))
+        # a mesh axis may shard at most one dim: first logical axis wins
+        if ax is not None:
+            axs = (ax,) if isinstance(ax, str) else tuple(ax)
+            axs = tuple(a for a in axs if a not in used)
+            used |= set(axs)
+            ax = None if not axs else (axs if len(axs) > 1 else axs[0])
+        parts.append(ax)
+    return P(*parts)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules=None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(logical):
+        return x
+    spec = spec_for(mesh, logical, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels.  Each subpackage: kernel.py (pl.pallas_call +
+BlockSpec), ops.py (jit'd public wrapper), ref.py (pure-jnp oracle)."""

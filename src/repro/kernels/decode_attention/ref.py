@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token KV-cache attention (GQA, optional ring
+buffer for sliding-window caches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_reference(q, cache_k, cache_v, pos, *, ring=False):
+    """q: (B, H, hd); cache_k/v: (B, S, KV, hd); pos: scalar int32.
+    ring=True: cache is a ring buffer (slot = position mod S)."""
+    B, H, hd = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    s_idx = jnp.arange(S)
+    if ring:
+        p_s = pos - ((pos - s_idx) % S)
+        valid = p_s >= 0
+    else:
+        valid = s_idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cache_v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

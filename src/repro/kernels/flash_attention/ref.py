@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for blocked attention (delegates to the model-level
+reference so there is exactly one ground truth)."""
+from repro.models.attention import attend_ref
+
+
+def flash_attention_reference(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd)."""
+    return attend_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused cosine-similarity matmul + running top-k.
+
+TPU adaptation of the paper's ScaNN-based CPU retrieval: brute-force blocked
+matmul on the MXU with the support-row normalization fused into the score
+tile, and a running (BQ, K) top-k buffer kept in VMEM that is merged with
+each score tile using only max/select/iota ops (no sort / no lax.top_k —
+those do not lower through Mosaic).
+
+Grid: (Q/BQ, N/BN); the output block index map pins the out block to the
+query tile so the N-dimension iterations revisit and accumulate in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38  # python float: avoids captured-constant arrays in the kernel
+
+
+def _knn_kernel(q_ref, s_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_s_ref[...] = jnp.full_like(out_s_ref, NEG)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)                     # (BQ, D)
+    s = s_ref[...].astype(jnp.float32)                     # (BN, D)
+    inv = jax.lax.rsqrt(jnp.sum(s * s, axis=-1) + 1e-12)   # (BN,)
+    sims = jax.lax.dot_general(q, s, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    sims = sims * inv[None, :]                             # (BQ, BN)
+
+    base = j * bn
+    tile_idx = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1) + base
+
+    cand_s = jnp.concatenate([out_s_ref[...], sims], axis=1)       # (BQ, K+BN)
+    cand_i = jnp.concatenate([out_i_ref[...], tile_idx], axis=1)
+
+    def body(t, carry):
+        cs, ci, acc_s, acc_i = carry
+        m = jnp.max(cs, axis=1, keepdims=True)                     # (BQ, 1)
+        # argmax via masked iota-max (Mosaic-safe: max/select only)
+        pos_iota = jax.lax.broadcasted_iota(jnp.int32, cs.shape, 1)
+        am = jnp.max(jnp.where(cs >= m, pos_iota, -1), axis=1,
+                     keepdims=True)                                # (BQ, 1)
+        chosen_i = jnp.take_along_axis(ci, am, axis=1)             # (BQ, 1)
+        acc_s = jax.lax.dynamic_update_slice(acc_s, m, (0, t))
+        acc_i = jax.lax.dynamic_update_slice(acc_i, chosen_i, (0, t))
+        hit = pos_iota == am
+        cs = jnp.where(hit, NEG, cs)
+        return cs, ci, acc_s, acc_i
+
+    acc_s = jnp.full_like(out_s_ref[...], NEG)
+    acc_i = jnp.full_like(out_i_ref[...], -1)
+    _, _, acc_s, acc_i = jax.lax.fori_loop(
+        0, k, body, (cand_s, cand_i, acc_s, acc_i))
+    out_s_ref[...] = acc_s
+    out_i_ref[...] = acc_i
+
+
+def knn_topk_pallas(queries, support, k: int, *, block_q: int = 128,
+                    block_n: int = 1024, interpret: bool = True):
+    Q, D = queries.shape
+    N, _ = support.shape
+    bq = min(block_q, Q)
+    bn = min(block_n, N)
+    assert Q % bq == 0 and N % bn == 0, (Q, N, bq, bn)
+    grid = (Q // bq, N // bn)
+    kern = functools.partial(_knn_kernel, k=k, bn=bn)
+    out_s, out_i = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, support)
+    return out_s, out_i

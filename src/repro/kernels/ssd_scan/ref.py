@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked scan.
+
+Shapes:
+  x  : (B, S, H, P)   inputs per head
+  dt : (B, S, H)      softplus'd step sizes
+  A  : (H,)           negative per-head decay rates
+  Bm : (B, S, G, N)   input matrices (G groups broadcast over heads)
+  Cm : (B, S, G, N)   output matrices
+Returns (y, final_state) with y: (B, S, H, P), final_state: (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular segment sums
+    L[i, j] = sum_{j < t <= i} dA_t  (i >= j), -inf above diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} not divisible by chunk {chunk}"
+
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bm = jnp.repeat(Bm.astype(f32), rep, axis=2)   # (B,S,H,N)
+    Cm = jnp.repeat(Cm.astype(f32), rep, axis=2)
+
+    # chunked views: (B, nc, Q, ...)
+    xc = x.reshape(B_, nc, chunk, H, P)
+    dtc = dt.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, H, N)
+    Cc = Cm.reshape(B_, nc, chunk, H, N)
+
+    dA = dtc * A[None, None, None, :]              # (B,nc,Q,H)
+    dA_h = jnp.moveaxis(dA, -1, 2)                 # (B,nc,H,Q)
+    L = jnp.exp(_segsum(dA_h))                     # (B,nc,H,Q,Q)
+
+    # intra-chunk (quadratic within chunk)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc) * L
+    xdt = xc * dtc[..., None]                      # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xdt)
+
+    # per-chunk final states
+    cs = jnp.cumsum(dA_h, axis=-1)                 # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)      # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqhn,bcqhp->bchpn",
+                        decay_to_end, Bc, xdt)     # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[..., -1])             # (B,nc,H)
+    h0 = (jnp.zeros((B_, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(h, inp):
+        dec, st = inp                              # (B,H), (B,H,P,N)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)        # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)              # (nc,B,H,P,N)
+    h_final, h_starts = jax.lax.scan(step, h0, (dec_t, st_t))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)        # (B,nc,H,P,N) state at chunk start
+
+    # inter-chunk contribution
+    decay_from_start = jnp.exp(cs)                 # (B,nc,H,Q) == exp(cumsum)
+    y_inter = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                         Cc, h_starts, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, h_final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One recurrent step.
+    state: (B,H,P,N); x_t: (B,H,P); dt_t: (B,H); B_t,C_t: (B,G,N)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    B_t = jnp.repeat(B_t.astype(f32), rep, axis=1)  # (B,H,N)
+    C_t = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    dA = jnp.exp(dt_t.astype(f32) * A[None, :])     # (B,H)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt_t.astype(f32), B_t, x_t.astype(f32))
+    new_state = state.astype(f32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C_t)
+    return y, new_state

@@ -1,0 +1,1 @@
+# launch: mesh construction, sharding rules, dry-run, train/serve drivers.

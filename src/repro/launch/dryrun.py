@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Do not move them.
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+# the production meshes, record memory/cost/collective analysis.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+#       --shape train_4k --mesh single --out results/dryrun.json
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#
+# Results are merged into the --out JSON incrementally so long sweeps are
+# resumable (pairs already present are skipped unless --force).
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
+from repro.distributed.sharding import sharding_context
+from repro.launch import hlo_analysis as HA
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+
+
+def reduced_depth(cfg, g, t):
+    return cfg.replace(n_groups=g, n_tail_groups=t if cfg.tail_pattern else 0,
+                       encoder_layers=min(cfg.encoder_layers, g)
+                       if cfg.encoder_layers else 0)
+
+
+def compile_bundle(cfg, shape, mesh, rules=None):
+    bundle = steps_mod.build(cfg, shape, mesh)
+    with mesh:
+        with sharding_context(mesh, rules):
+            jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings)
+            lowered = jitted.lower(*bundle.args)
+            compiled = lowered.compile()
+    return compiled
+
+
+def run_pair(arch: str, shape_name: str, mesh, mesh_name: str,
+             extrapolate: bool = True, moe_shard_map: bool = False,
+             seq_parallel: bool = False, remat_policy: str = "full",
+             no_cross_kv: bool = False, mla_naive: bool = False,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if moe_shard_map:
+        cfg = cfg.replace(moe_shard_map=True)
+    if remat_policy != "full":
+        cfg = cfg.replace(remat_policy=remat_policy)
+    if no_cross_kv:
+        cfg = cfg.replace(cross_kv_cache=False)
+    if mla_naive:
+        cfg = cfg.replace(mla_naive_decode=True)
+    rules = None
+    if seq_parallel:
+        from repro.distributed.sharding import DEFAULT_RULES
+        rules = dict(DEFAULT_RULES, seq="model")
+    shape = get_shape(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mode": shape.mode, "tag": tag,
+           "variant": {"moe_shard_map": moe_shard_map,
+                       "seq_parallel": seq_parallel,
+                       "remat_policy": remat_policy}}
+    reason = steps_mod.skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = reason
+        return rec
+    try:
+        t0 = time.time()
+        compiled = compile_bundle(cfg, shape, mesh, rules)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = HA.memory_summary(compiled)
+        rec["raw_cost"] = HA.cost_summary(compiled)
+        rec["raw_collectives"] = HA.collective_bytes(compiled.as_text())
+        print(compiled.memory_analysis())
+
+        if extrapolate:
+            pts = {}
+            gt_list = [(1, 1), (2, 1), (1, 2)] if cfg.tail_pattern \
+                else [(1, 0), (2, 0)]
+            for (g, t) in gt_list:
+                small = reduced_depth(cfg, g, t)
+                c = compile_bundle(small, shape, mesh, rules)
+                cs = HA.cost_summary(c)
+                coll = HA.collective_bytes(c.as_text())
+                pts[(g, t)] = {"flops": cs["flops"], "bytes": cs["bytes"],
+                               "coll": coll["total"],
+                               **{f"coll_{k}": v for k, v in coll.items()
+                                  if k != "total"}}
+            ext = HA.extrapolate(pts, cfg.n_groups, cfg.n_tail_groups)
+            rec["extrapolated"] = ext
+            rec["extrapolation_points"] = {f"{g},{t}": v
+                                           for (g, t), v in pts.items()}
+        rec["status"] = "OK"
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def merge_out(path: Path, rec: dict):
+    data = {}
+    if path.exists():
+        data = json.loads(path.read_text())
+    key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+    if rec.get("tag"):
+        key += f"|{rec['tag']}"
+    data[key] = rec
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(data, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--moe-shard-map", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "dots"])
+    ap.add_argument("--mla-naive-decode", action="store_true",
+                    help="S Perf E baseline: naive latent-cache expansion")
+    ap.add_argument("--no-cross-kv-cache", action="store_true",
+                    help="baseline: recompute cross K/V per decode step")
+    ap.add_argument("--tag", default="",
+                    help="suffix key for perf-variant records")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    existing = json.loads(out.read_text()) if out.exists() else {}
+
+    meshes = {"single": False, "multi": True}
+    mesh_names = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    pairs = []
+    if args.all:
+        for a in ARCHS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        pairs = [(args.arch, args.shape)]
+
+    for mesh_name in mesh_names:
+        mesh = make_production_mesh(multi_pod=meshes[mesh_name])
+        # extrapolation (roofline) only on the single-pod mesh
+        extrap = (mesh_name == "single") and not args.no_extrapolate
+        for (a, s) in pairs:
+            key = f"{a}|{s}|{mesh_name}" + (f"|{args.tag}" if args.tag else "")
+            if not args.force and key in existing \
+                    and existing[key].get("status", "").startswith(("OK", "SKIP")):
+                print(f"[skip cached] {key}")
+                continue
+            print(f"=== {key} ===", flush=True)
+            rec = run_pair(a, s, mesh, mesh_name, extrapolate=extrap,
+                           moe_shard_map=args.moe_shard_map,
+                           seq_parallel=args.seq_parallel,
+                           remat_policy=args.remat_policy,
+                           no_cross_kv=args.no_cross_kv_cache,
+                           mla_naive=args.mla_naive_decode, tag=args.tag)
+            print(f"  -> {rec['status']} "
+                  f"(compile {rec.get('compile_s', '-')}s)", flush=True)
+            merge_out(out, rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# Must precede all other imports (jax locks device count on first init).
+
+# Roofline dry-run for the PAPER'S TECHNIQUE: mesh-sharded exact kNN
+# retrieval at production scale.  Lowers sharded_knn_topk on the single-pod
+# (16,16) mesh with ShapeDtypeStruct inputs and reports the three roofline
+# terms under variants (dtype, k_local).
+#
+#   PYTHONPATH=src python -m repro.launch.knn_dryrun \
+#       --n 100000000 --q 1024 --k 100 --out results/knn_roofline.json
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharded_knn import sharded_knn_topk
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+
+def lower_variant(mesh, n, q, d, k, dtype, k_local):
+    queries = jax.ShapeDtypeStruct((q, d), jnp.float32)
+    support = jax.ShapeDtypeStruct((n, d), dtype)
+
+    def fn(qq, ss):
+        return sharded_knn_topk(qq, ss, k, mesh, k_local=k_local)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = tuple(mesh.axis_names)
+    with mesh:
+        compiled = jax.jit(
+            fn,
+            in_shardings=(NamedSharding(mesh, P()),
+                          NamedSharding(mesh, P(axes, None))),
+            out_shardings=(NamedSharding(mesh, P()),
+                           NamedSharding(mesh, P())),
+        ).lower(queries, support).compile()
+    return compiled
+
+
+def analyze(compiled, label):
+    cost = HA.cost_summary(compiled)
+    coll = HA.collective_bytes(compiled.as_text())
+    rec = {
+        "variant": label,
+        "flops": cost["flops"], "bytes": cost["bytes"],
+        "coll_bytes": coll["total"], "coll_by_op": coll,
+        "t_compute_s": cost["flops"] / PEAK_FLOPS_BF16,
+        "t_memory_s": cost["bytes"] / HBM_BW,
+        "t_collective_s": coll["total"] / ICI_BW,
+        "memory": HA.memory_summary(compiled),
+    }
+    rec["dominant"] = max(("compute", "memory", "collective"),
+                          key=lambda t: rec[f"t_{t}_s"]
+                          if t != "collective" else rec["t_collective_s"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000_000)
+    ap.add_argument("--q", type=int, default=1024)
+    ap.add_argument("--d", type=int, default=768)
+    ap.add_argument("--k", type=int, default=100)
+    ap.add_argument("--out", default="results/knn_roofline.json")
+    ap.add_argument("--variants", default="f32,bf16,bf16_klocal8")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    variant_defs = {
+        "f32": (jnp.float32, 0),
+        "bf16": (jnp.bfloat16, 0),
+        "bf16_klocal8": (jnp.bfloat16, 8),
+        "f32_klocal8": (jnp.float32, 8),
+    }
+    results = []
+    for v in args.variants.split(","):
+        dtype, k_local = variant_defs[v]
+        print(f"=== knn {v}: N={args.n} Q={args.q} k={args.k} "
+              f"k_local={k_local or args.k} ===", flush=True)
+        compiled = lower_variant(mesh, args.n, args.q, args.d, args.k,
+                                 dtype, k_local)
+        rec = analyze(compiled, v)
+        rec.update(n=args.n, q=args.q, d=args.d, k=args.k,
+                   k_local=k_local or args.k)
+        results.append(rec)
+        print(f"  compute {rec['t_compute_s']:.2e}s  memory "
+              f"{rec['t_memory_s']:.2e}s  collective "
+              f"{rec['t_collective_s']:.2e}s  -> {rec['dominant']}",
+              flush=True)
+
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(results, indent=1, default=float))
+    print(f"[knn_dryrun] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

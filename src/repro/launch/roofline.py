@@ -1,0 +1,136 @@
+"""Roofline analysis over the dry-run results.
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s      (197e12 bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw           (819e9)
+    collective term = collective_bytes_per_device / link_bw   (50e9)
+(cost_analysis runs on the partitioned module, so its numbers are already
+per-device; totals across chips divide out of the mandated formulas.)
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), N excluding embeddings;
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overhead.
+
+  PYTHONPATH=src python -m repro.launch.roofline --in results/dryrun.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
+from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+
+def param_counts(cfg):
+    """(total_params, active_params), excluding embed/lm_head."""
+    import jax
+    from repro.models import model as M
+    shapes = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = int(np.prod(leaf.shape))
+        if names[-1] in ("embed", "lm_head"):
+            continue
+        total += n
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down"):
+            routed += n
+    active = total
+    if cfg.n_experts:
+        active = total - routed * (1 - cfg.experts_top_k / cfg.n_experts)
+    return total, int(active)
+
+
+def tokens_for(shape):
+    if shape.mode == "decode":
+        return shape.global_batch          # one token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+def analyze(record, n_chips=256):
+    cfg = get_config(record["arch"])
+    shape = get_shape(record["shape"])
+    ext = record.get("extrapolated") or {}
+    flops = ext.get("flops", record.get("raw_cost", {}).get("flops", 0.0))
+    bytes_ = ext.get("bytes", record.get("raw_cost", {}).get("bytes", 0.0))
+    coll = ext.get("coll", record.get("raw_collectives", {}).get("total", 0.0))
+
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    total, active = param_counts(cfg)
+    D = tokens_for(shape)
+    mult = 6 if shape.mode == "train" else 2
+    model_flops = mult * active * D / n_chips          # per-device
+    ratio = model_flops / flops if flops else 0.0
+
+    suggestion = {
+        "compute": "reduce recompute (remat policy) / raise arithmetic "
+                   "intensity with larger fused matmul tiles",
+        "memory": "shard activations over 'model' (sequence parallelism) "
+                  "and cut remat-saved residuals",
+        "collective": "re-schedule collectives (shard_map all-to-all MoE, "
+                      "overlap AG/RS with compute, 2D-shard smaller axes)",
+    }[dominant]
+
+    return {
+        "arch": record["arch"], "shape": record["shape"],
+        "mode": shape.mode,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": model_flops,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": ratio,
+        "params_total": total, "params_active": active,
+        "bytes_per_dev": bytes_, "coll_bytes_per_dev": coll,
+        "what_would_move_it": suggestion,
+    }
+
+
+def fmt_row(a):
+    return (f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.2e} | "
+            f"{a['t_memory_s']:.2e} | {a['t_collective_s']:.2e} | "
+            f"**{a['dominant']}** | {a['useful_ratio']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    data = json.loads(Path(args.inp).read_text())
+    rows = []
+    for key, rec in sorted(data.items()):
+        if rec.get("mesh") != args.mesh:
+            continue
+        if not str(rec.get("status", "")).startswith("OK"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec.get("status")})
+            continue
+        rows.append(analyze(rec))
+
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(rows, indent=1, default=float))
+
+    print("| arch | shape | compute(s) | memory(s) | collective(s) | "
+          "dominant | useful ratio |")
+    print("|---|---|---|---|---|---|---|")
+    for a in rows:
+        if "dominant" in a:
+            print(fmt_row(a))
+        else:
+            print(f"| {a['arch']} | {a['shape']} | - | - | - | "
+                  f"{a['status']} | - |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Parameter / activation / cache PartitionSpec rules.
+
+2D weight sharding: tensor-parallel over "model" (heads, ffn-hidden, experts,
+vocab) and FSDP over ("pod", "data") on the complementary matmul dim.
+Stacked layer params (under stack groups/tail) get a leading None axis.
+Decode KV caches are sequence-sharded over "model" (flash-decoding style:
+GSPMD turns the softmax/contraction over the sharded length into
+all-reduces), batch-sharded over the data axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = ("pod", "data")
+TP = "model"
+
+
+def _ax(mesh, axes):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+# (leaf name, rank) -> logical spec (before the stacked-layer prefix)
+_RULES = {
+    ("embed", 2): (TP, FSDP),
+    ("lm_head", 2): (FSDP, TP),
+    ("frontend_proj", 2): (None, FSDP),
+    ("wq", 2): (FSDP, TP), ("wk", 2): (FSDP, TP), ("wv", 2): (FSDP, TP),
+    ("wo", 2): (TP, FSDP),
+    ("bq", 1): (TP,), ("bk", 1): (TP,), ("bv", 1): (TP,),
+    ("w_gate", 2): (FSDP, TP), ("w_up", 2): (FSDP, TP),
+    ("w_down", 2): (TP, FSDP),
+    ("w_gate", 3): (TP, FSDP, None), ("w_up", 3): (TP, FSDP, None),
+    ("w_down", 3): (TP, None, FSDP),
+    ("router", 2): (FSDP, None),
+    ("w_dkv", 2): (FSDP, None), ("w_dq", 2): (FSDP, None),
+    ("w_uk", 2): (None, TP), ("w_uv", 2): (None, TP), ("w_uq", 2): (None, TP),
+    ("in_proj", 2): (FSDP, TP), ("out_proj", 2): (TP, FSDP),
+    ("conv_w", 2): (None, TP), ("conv_b", 1): (TP,),
+    ("A_log", 1): (TP,), ("D", 1): (TP,), ("dt_bias", 1): (TP,),
+    ("scale", 1): (None,),
+}
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    return int(np.prod([mesh.shape[a] for a in ax]))
+
+
+def _fit_spec(mesh: Mesh, parts, shape) -> P:
+    """Drop sharding on dims whose size isn't divisible by the axis product
+    (jit in_shardings require exact divisibility, e.g. odd vocab sizes)."""
+    fixed = []
+    for ax, dim in zip(parts, shape):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        fixed.append(ax)
+    return P(*fixed)
+
+
+def _leaf_spec(mesh: Mesh, path, leaf) -> P:
+    names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+    stacked = any(n in ("groups", "tail") for n in names)
+    leaf_name = names[-1] if names else ""
+    # list indices (mlp_params lists) -> look back for a dict key
+    if leaf_name.isdigit() or leaf_name in ("w", "b"):
+        for n in reversed(names):
+            if not n.isdigit() and n not in ("w", "b"):
+                leaf_name = n
+                break
+    rank = leaf.ndim - (1 if stacked else 0)
+    rule = _RULES.get((leaf_name, rank))
+    if rule is None:
+        # default: replicate
+        return P(*([None] * leaf.ndim))
+    parts = [None] if stacked else []
+    parts += [_ax(mesh, r) for r in rule]
+    assert len(parts) == leaf.ndim, (names, leaf.shape, rule)
+    return _fit_spec(mesh, parts, leaf.shape)
+
+
+def param_shardings(mesh: Mesh, params_shape) -> Any:
+    """Pytree of NamedShardings matching a params (or ShapeDtypeStruct) tree."""
+    def fn(path, leaf):
+        return NamedSharding(mesh, _leaf_spec(mesh, path, leaf))
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def opt_shardings(mesh: Mesh, opt_shape, params_shape) -> Any:
+    ps = param_shardings(mesh, params_shape)
+    return {
+        "m": ps, "v": ps, "master": ps,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_axes(mesh: Mesh):
+    return _ax(mesh, FSDP)
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> Any:
+    """tokens/labels (B, S) -> P(batch, None); patches/frames (B, T, F)."""
+    b = batch_axes(mesh)
+
+    def fn(path, leaf):
+        parts = [b] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, _fit_spec(mesh, parts, leaf.shape))
+    return jax.tree_util.tree_map_with_path(fn, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, caches_shape, batch: int) -> Any:
+    """Stacked caches: leading group axis None; then (B, S, ...) for KV
+    caches -> P(None, batch, "model", ...); SSM states (B, H, P, N) ->
+    P(None, batch, "model", None, None); conv states (B, K-1, C) ->
+    (None, batch, None, "model")."""
+    b = batch_axes(mesh) if batch > 1 else None
+    tp = _ax(mesh, TP)
+
+    def fn(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        ln = names[-1]
+        if ln in ("k", "v", "ck", "cv"):  # (G, B, S, KV, hd)
+            parts = [None, b, tp, None, None]
+        elif ln in ("c", "kr"):         # (G, B, S, r)
+            parts = [None, b, tp, None]
+        elif ln == "ssd":               # (G, B, H, P, N)
+            parts = [None, b, tp, None, None]
+        elif ln == "conv":              # (G, B, K-1, C)
+            parts = [None, b, None, tp]
+        else:
+            parts = [None] * leaf.ndim
+        return NamedSharding(mesh, _fit_spec(mesh, parts, leaf.shape))
+    return jax.tree_util.tree_map_with_path(fn, caches_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,165 @@
+"""Builds the jit-able step function + ShapeDtypeStruct inputs + shardings
+for every (architecture x input-shape) combination of the dry-run matrix.
+
+Decode shapes lower ``serve_step`` (ONE token against a seq_len cache);
+train lowers the full AdamW ``train_step``; prefill lowers the forward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step
+from . import shardings as SH
+
+
+class StepBundle(NamedTuple):
+    fn: Any                       # callable to jit
+    args: Tuple                   # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        n_text = S - cfg.num_patches
+        batch["tokens"] = sds((B, n_text), jnp.int32)
+        batch["patches"] = sds((B, cfg.num_patches, cfg.frontend_dim),
+                               jnp.bfloat16)
+        if with_labels:
+            batch["labels"] = sds((B, n_text), jnp.int32)
+    elif cfg.is_encoder_decoder:
+        enc_len = S // 2
+        dec_len = S - enc_len
+        batch["frames"] = sds((B, enc_len, cfg.frontend_dim), jnp.bfloat16)
+        batch["tokens"] = sds((B, dec_len), jnp.int32)
+        if with_labels:
+            batch["labels"] = sds((B, dec_len), jnp.int32)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+        if with_labels:
+            batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "SKIP(full-attention)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Public helper (per the mandate): ShapeDtypeStruct stand-ins for every
+    model input of this (arch, shape)."""
+    mode = shape.mode
+    if mode == "train":
+        return _batch_specs(cfg, shape, with_labels=True)
+    if mode == "prefill":
+        return _batch_specs(cfg, shape, with_labels=False)
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    long_mode = shape.name == "long_500k"
+    enc_len = min(4096, max(S // 8, 16)) if cfg.is_encoder_decoder else 0
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, B, S, long_mode=long_mode,
+                              enc_len=enc_len))
+    specs = {"caches": caches, "token": sds((B, 1), jnp.int32),
+             "pos": sds((), jnp.int32)}
+    if cfg.is_encoder_decoder and not cfg.cross_kv_cache:
+        specs["enc_out"] = sds((B, enc_len, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh) -> StepBundle:
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(reason)
+    long_mode = shape.name == "long_500k"
+    B, S = shape.global_batch, shape.seq_len
+
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = SH.param_shardings(mesh, params_shape)
+
+    if shape.mode == "train":
+        opt_cfg = O.OptConfig()
+        opt_shape = jax.eval_shape(O.init, params_shape)
+        o_shard = SH.opt_shardings(mesh, opt_shape, params_shape)
+        batch = _batch_specs(cfg, shape, with_labels=True)
+        b_shard = SH.batch_shardings(mesh, batch)
+        fn = make_train_step(cfg, opt_cfg)
+        out_shard = (p_shard, o_shard,
+                     jax.tree.map(lambda _: SH.replicated(mesh),
+                                  {"loss": 0., "aux_loss": 0., "tokens": 0.,
+                                   "grad_norm": 0., "lr": 0.,
+                                   "total_loss": 0.}))
+        return StepBundle(fn, (params_shape, opt_shape, batch),
+                          (p_shard, o_shard, b_shard), out_shard,
+                          {"mode": "train"})
+
+    if shape.mode == "prefill":
+        batch = _batch_specs(cfg, shape, with_labels=False)
+        b_shard = SH.batch_shardings(mesh, batch)
+
+        def fwd(params, batch):
+            logits, _ = M.forward(params, cfg, batch, long_mode=long_mode)
+            return logits
+
+        blog = SH.batch_axes(mesh)
+        from jax.sharding import NamedSharding
+        tp = "model" if "model" in mesh.axis_names else None
+        n_text = batch["tokens"].shape[1] + (
+            cfg.num_patches if cfg.frontend == "vision" else 0)
+        out_shard = NamedSharding(mesh, SH._fit_spec(
+            mesh, [blog, None, tp],
+            (B, n_text, cfg.vocab_size)))
+        return StepBundle(fwd, (params_shape, batch), (p_shard, b_shard),
+                          out_shard, {"mode": "prefill"})
+
+    # ---- decode ----
+    specs = input_specs(cfg, shape)
+    caches_shape = specs["caches"]
+    c_shard = SH.cache_shardings(mesh, caches_shape, B)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    blog = SH.batch_axes(mesh) if B > 1 else None
+    tok_shard = NamedSharding(mesh, SH._fit_spec(mesh, [blog, None], (B, 1)))
+    pos_shard = SH.replicated(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    logits_shard = NamedSharding(mesh, SH._fit_spec(
+        mesh, [blog, tp], (B, cfg.vocab_size)))
+
+    if cfg.is_encoder_decoder and not cfg.cross_kv_cache:
+        enc_shard = NamedSharding(mesh, P(blog, None, None))
+
+        def decode(params, caches, token, pos, enc_out):
+            return M.decode_step(params, cfg, caches, token, pos,
+                                 enc_out=enc_out.astype(jnp.dtype(cfg.dtype)))
+
+        return StepBundle(decode,
+                          (params_shape, caches_shape, specs["token"],
+                           specs["pos"], specs["enc_out"]),
+                          (p_shard, c_shard, tok_shard, pos_shard, enc_shard),
+                          (logits_shard, c_shard), {"mode": "decode"})
+
+    def decode(params, caches, token, pos):
+        return M.decode_step(params, cfg, caches, token, pos)
+
+    return StepBundle(decode,
+                      (params_shape, caches_shape, specs["token"],
+                       specs["pos"]),
+                      (p_shard, c_shard, tok_shard, pos_shard),
+                      (logits_shard, c_shard), {"mode": "decode"})

@@ -1,0 +1,80 @@
+"""Training driver.
+
+Real execution on this container uses reduced configs on CPU; the same code
+path lowers to the production mesh when devices exist (--mesh single/multi).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data.lm_data import DataConfig, SyntheticLMStream
+from repro.models import model as M
+from repro.training import checkpoint as CKPT
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config for CPU execution")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    print(f"[train] {cfg.name}: {cfg.total_blocks()} blocks, "
+          f"d_model={cfg.d_model}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(key, cfg)
+    opt_cfg = O.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    opt_state = O.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    stream = SyntheticLMStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed))
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+        if cfg.frontend == "vision":
+            batch["patches"] = jnp.zeros(
+                (args.batch, cfg.num_patches, cfg.frontend_dim), jnp.float32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros(
+                (args.batch, args.seq // 2, cfg.frontend_dim), jnp.float32)
+            batch["tokens"] = batch["tokens"][:, : args.seq // 2]
+            batch["labels"] = batch["labels"][:, : args.seq // 2]
+        params, opt_state, met = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"  step {step:4d} loss={float(met['loss']):.4f} "
+                  f"gnorm={float(met['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+
+    if args.ckpt:
+        CKPT.save(args.ckpt, params)
+        print(f"[train] saved checkpoint -> {args.ckpt}")
+    return float(met["loss"])
+
+
+if __name__ == "__main__":
+    main()

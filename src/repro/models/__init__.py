@@ -1,0 +1,1 @@
+from . import attention, layers, model, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,1 @@
+from . import encoder, engine, router_service, scheduler  # noqa: F401

@@ -1,0 +1,132 @@
+"""Single-model serving engine: slot-based continuous batching over the
+framework's prefill/decode steps.
+
+Requests are admitted into fixed decode slots; each slot tracks its own
+position (the decode step takes per-slot position vectors), so new requests
+join while others are mid-generation — continuous batching without
+recompilation.  Prefill runs the full forward and seeds the slot's KV cache
+by replaying the prompt through decode steps in teacher-forcing mode (exact:
+decode == forward was verified by tests; for long prompts a chunked prefill
+would be the production path and is noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt_tokens: np.ndarray           # (L,)
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output_tokens: Optional[List[int]] = None
+    n_prompt: int = 0
+    done: bool = False
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+
+
+class ServingEngine:
+    """Engine for one pool model (reduced config on CPU; the same step
+    functions lower to the production mesh in the dry-run)."""
+
+    def __init__(self, cfg, params=None, *, max_slots: int = 4,
+                 cache_len: int = 128, seed: int = 0, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params if params is not None else M.init_params(
+            jax.random.PRNGKey(seed), cfg)
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.greedy = greedy
+
+        self.caches = M.init_caches(cfg, max_slots, cache_len)
+        self.pos = np.full((max_slots,), -1, np.int64)       # next position
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self._decode = jax.jit(
+            lambda params, caches, tok, pos: M.decode_step(
+                params, cfg, caches, tok, pos))
+        self.stats = {"decode_steps": 0, "tokens_out": 0, "prefill_tokens": 0}
+
+    # ---- slot management ----
+    def has_free_slot(self) -> bool:
+        return any(r is None for r in self.slot_req)
+
+    def admit(self, req: Request) -> bool:
+        for s in range(self.max_slots):
+            if self.slot_req[s] is None:
+                self.slot_req[s] = req
+                req.output_tokens = []
+                req.n_prompt = len(req.prompt_tokens)
+                req.t_submit = time.time()
+                self.pos[s] = 0
+                self._prefill_slot(s, req)
+                return True
+        return False
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Teacher-forced prompt replay into the slot's cache."""
+        toks = np.asarray(req.prompt_tokens, np.int32)
+        self.stats["prefill_tokens"] += len(toks)
+        batch_tok = np.zeros((self.max_slots, 1), np.int32)
+        for t, tok in enumerate(toks):
+            batch_tok[:] = 0
+            batch_tok[slot, 0] = tok
+            pos_vec = np.maximum(self.pos, 0).astype(np.int32)
+            pos_vec[slot] = t
+            _, self.caches = self._decode(self.params, self.caches,
+                                          jnp.asarray(batch_tok),
+                                          jnp.asarray(pos_vec))
+        self.pos[slot] = len(toks)
+
+    # ---- decode wave over all active slots ----
+    def step(self):
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        batch_tok = np.zeros((self.max_slots, 1), np.int32)
+        for s in active:
+            r = self.slot_req[s]
+            last = (r.output_tokens[-1] if r.output_tokens
+                    else int(r.prompt_tokens[-1]))
+            batch_tok[s, 0] = last
+        pos_vec = np.maximum(self.pos, 0).astype(np.int32)
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           jnp.asarray(batch_tok),
+                                           jnp.asarray(pos_vec))
+        logits = np.asarray(logits)
+        self.stats["decode_steps"] += 1
+        for s in active:
+            r = self.slot_req[s]
+            nxt = int(np.argmax(logits[s]))
+            r.output_tokens.append(nxt)
+            self.stats["tokens_out"] += 1
+            self.pos[s] += 1
+            if (len(r.output_tokens) >= r.max_new_tokens
+                    or self.pos[s] >= self.cache_len - 1):
+                r.done = True
+                r.t_finish = time.time()
+                self.slot_req[s] = None
+                self.pos[s] = -1
+
+    def run_until_drained(self, pending: List[Request],
+                          max_steps: int = 10_000) -> int:
+        """Admit + decode until every request finishes (requests mark
+        themselves done; the caller keeps the references)."""
+        pending = list(pending)
+        steps = 0
+        while (pending or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            while pending and self.has_free_slot():
+                self.admit(pending.pop(0))
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,100 @@
+"""RouterService: the paper's router as the front door of a multi-model
+serving deployment.
+
+  request text -> embed (encoder.py) -> router.predict_utility ->
+  argmax_m  s_hat - lambda * c_hat  -> dispatch to that model's engine.
+
+Also surfaces the §8 practitioner diagnostics per query (kth-neighbour
+distance percentile + neighbourhood agreement) so callers can apply fallback
+policies on out-of-coverage queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dataset import RoutingDataset
+from repro.core.routers.base import Router
+from repro.core.routers.knn import KNNRouter
+from . import encoder
+from .engine import Request, ServingEngine
+
+
+@dataclasses.dataclass
+class RoutedResult:
+    uid: int
+    model: str
+    request: Request
+    predicted_score: float
+    predicted_cost: float
+    confidence: Optional[float] = None
+
+
+class RouterService:
+    def __init__(self, router: Router, engines: Dict[str, ServingEngine],
+                 lam: float = 0.0, fallback_model: Optional[str] = None,
+                 confidence_floor: float = 0.02):
+        self.router = router
+        self.engines = engines
+        self.model_names = list(engines)
+        self.lam = lam
+        self.fallback_model = fallback_model
+        self.confidence_floor = confidence_floor
+        self._uid = 0
+        self.log: List[RoutedResult] = []
+
+    # ---- routing ----
+    def route_embeddings(self, emb: np.ndarray) -> np.ndarray:
+        s_hat, c_hat = self.router.predict_utility(emb)
+        return np.argmax(s_hat - self.lam * c_hat, axis=1)
+
+    def submit_texts(self, texts: Sequence[str], prompts_tokens=None,
+                     max_new_tokens: int = 8) -> List[RoutedResult]:
+        emb = encoder.embed_texts(list(texts))
+        s_hat, c_hat = self.router.predict_utility(emb)
+        util = s_hat - self.lam * c_hat
+        choice = np.argmax(util, axis=1)
+
+        conf = None
+        if isinstance(self.router, KNNRouter):
+            kth, agree = self.router.confidence(emb)
+            conf = agree
+
+        results = []
+        for i, text in enumerate(texts):
+            m = self.model_names[choice[i] % len(self.model_names)]
+            if (conf is not None and self.fallback_model
+                    and conf[i] < self.confidence_floor):
+                m = self.fallback_model
+            toks = (prompts_tokens[i] if prompts_tokens is not None
+                    else encoder.hash_tokenize(text)[:16])
+            toks = np.asarray(toks, np.int32)
+            vocab = self.engines[m].cfg.vocab_size
+            req = Request(uid=self._uid, prompt_tokens=toks % vocab,
+                          max_new_tokens=max_new_tokens)
+            self._uid += 1
+            res = RoutedResult(
+                uid=req.uid, model=m, request=req,
+                predicted_score=float(s_hat[i, choice[i]]),
+                predicted_cost=float(c_hat[i, choice[i]]),
+                confidence=float(conf[i]) if conf is not None else None)
+            results.append(res)
+        return results
+
+    # ---- execution ----
+    def execute(self, results: List[RoutedResult]) -> Dict[str, int]:
+        by_model: Dict[str, List[Request]] = {}
+        for r in results:
+            by_model.setdefault(r.model, []).append(r.request)
+        steps = {}
+        for m, reqs in by_model.items():
+            steps[m] = self.engines[m].run_until_drained(reqs)
+        self.log.extend(results)
+        return steps
+
+    def serve_texts(self, texts: Sequence[str], **kw):
+        results = self.submit_texts(texts, **kw)
+        self.execute(results)
+        return results

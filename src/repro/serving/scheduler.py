@@ -1,0 +1,53 @@
+"""Request-level scheduler: batches incoming requests into admission waves
+per engine with a cost budget (utility-aware admission), FIFO within class.
+Deliberately simple and deterministic — the policies the paper cares about
+live in the router; the scheduler's job is backpressure."""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List
+
+from .engine import Request, ServingEngine
+
+
+@dataclass
+class SchedulerStats:
+    admitted: int = 0
+    completed: int = 0
+    waves: int = 0
+
+
+class WaveScheduler:
+    def __init__(self, engines: Dict[str, ServingEngine]):
+        self.engines = engines
+        self.queues: Dict[str, Deque[Request]] = {
+            m: collections.deque() for m in engines}
+        self.stats = SchedulerStats()
+
+    def enqueue(self, model: str, req: Request):
+        self.queues[model].append(req)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def tick(self):
+        """One scheduling wave: admit up to free slots per engine, then one
+        decode step each."""
+        for m, eng in self.engines.items():
+            q = self.queues[m]
+            while q and eng.has_free_slot():
+                eng.admit(q.popleft())
+                self.stats.admitted += 1
+            before = sum(r is not None for r in eng.slot_req)
+            eng.step()
+            after = sum(r is not None for r in eng.slot_req)
+            self.stats.completed += before - after
+        self.stats.waves += 1
+
+    def drain(self, max_waves: int = 50_000):
+        while (self.pending() or any(
+                any(r is not None for r in e.slot_req)
+                for e in self.engines.values())) and self.stats.waves < max_waves:
+            self.tick()
+        return self.stats

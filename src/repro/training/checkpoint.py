@@ -1,0 +1,45 @@
+"""Flat-npz checkpointing for param/optimizer pytrees (host-side).
+
+Leaves are saved under their tree-path key; restore validates structure and
+shapes against a template pytree.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, template):
+    data = np.load(path)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for pth, leaf in flat_t:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,24 @@
+"""The jitted training step used by the launcher and the dry-run."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from . import optimizer as opt_mod
+
+
+def make_train_step(cfg, opt_cfg: opt_mod.OptConfig):
+    def train_step(params, opt_state, batch):
+        def loss_wrap(p):
+            total, metrics = M.loss_fn(p, cfg, batch)
+            return total, metrics
+        (total, metrics), grads = jax.value_and_grad(
+            loss_wrap, has_aux=True)(params)
+        new_params, new_state, opt_metrics = opt_mod.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics, total_loss=total)
+        return new_params, new_state, metrics
+    return train_step

@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import eval as E
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# convex-hull AUC invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def point_sets(draw):
+    n = draw(st.integers(3, 30))
+    cs = draw(st.lists(st.floats(0.0, 1.0), min_size=n, max_size=n))
+    ss = draw(st.lists(st.floats(0.0, 1.0), min_size=n, max_size=n))
+    return np.array(list(zip(cs, ss)))
+
+
+@given(point_sets())
+@settings(**SETTINGS)
+def test_hull_auc_bounded(pts):
+    auc = E.hull_auc(pts, c_norm=1.0)
+    assert -1e-9 <= auc <= 100.0 + 1e-6
+
+
+@given(point_sets(), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_hull_auc_monotone_in_added_points(pts, c, s):
+    base = E.hull_auc(pts, 1.0)
+    grown = E.hull_auc(np.vstack([pts, [[c, s]]]), 1.0)
+    assert grown >= base - 1e-9            # adding an option can't hurt
+
+
+@given(point_sets())
+@settings(**SETTINGS)
+def test_hull_is_nondecreasing(pts):
+    hull = E.nondecreasing_hull(pts)
+    assert np.all(np.diff(hull[:, 0]) >= -1e-12)
+    assert np.all(np.diff(hull[:, 1]) >= -1e-12)
+
+
+# ---------------------------------------------------------------------------
+# kNN retrieval == oracle argsort
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(8, 60), st.integers(2, 16),
+       st.integers(1, 8), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_knn_topk_equals_argsort(q_n, n, d, k, seed):
+    from repro.kernels.knn_topk.ops import knn_topk
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(q_n, d)).astype(np.float32)
+    q /= np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+    s = rng.normal(size=(n, d)).astype(np.float32)
+    k = min(k, n)
+    sc, _ = knn_topk(jnp.asarray(q), jnp.asarray(s), k)
+    sn = s / np.maximum(np.linalg.norm(s, axis=1, keepdims=True), 1e-12)
+    sims = q @ sn.T
+    expect = np.sort(sims, axis=1)[:, ::-1][:, :k]
+    np.testing.assert_allclose(np.asarray(sc), expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 64), st.integers(2, 8), st.integers(1, 3),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_moe_dispatch_indices_invariants(T, e_total, k, seed):
+    from repro.models.moe import _capacity, _dispatch_indices
+    rng = np.random.default_rng(seed)
+    k = min(k, e_total)
+    flat_e = jnp.asarray(rng.integers(0, e_total, T * k), jnp.int32)
+    C = _capacity(T, k, e_total, 1.25)
+    slot, keep = _dispatch_indices(flat_e, e_total, C)
+    slot, keep = np.asarray(slot), np.asarray(keep)
+    # kept slots are unique and within range
+    kept = slot[keep]
+    assert len(np.unique(kept)) == len(kept)
+    assert kept.min(initial=0) >= 0 and kept.max(initial=0) < e_total * C
+    # each kept slot maps to the expert that chose it
+    experts = kept // C
+    np.testing.assert_array_equal(experts, np.asarray(flat_e)[keep])
+    # capacity respected per expert
+    counts = np.bincount(experts, minlength=e_total)
+    assert counts.max(initial=0) <= C
+
+
+# ---------------------------------------------------------------------------
+# Theorem 7.2 direction: kNN regret shrinks with support density
+# ---------------------------------------------------------------------------
+
+def test_knn_regret_decreases_with_density():
+    from repro.core.routers import make_router
+    from repro.data.prices import ROUTERBENCH
+    from repro.data.synthetic import GenSpec, generate
+    ds = generate(GenSpec(name="dens", models=ROUTERBENCH["RouterBench"],
+                          n_queries=3000, locality=0.97, binary=False,
+                          latent_dim=4, seed=11))
+    oracle = E.oracle_auc(ds)["auc"]
+    aucs = []
+    for n in (60, 400, 1800):
+        ds.train_idx = np.arange(n)
+        ds.test_idx = np.arange(2400, 3000)
+        r = make_router("knn100").fit(ds)
+        aucs.append(E.utility_auc(r, ds)["auc"])
+    assert aucs[0] < aucs[-1] <= oracle + 1e-6
+    assert oracle - aucs[-1] < oracle - aucs[0]
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_adamw_descends_quadratic(seed):
+    from repro.training import optimizer as O
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros((8,))}
+    opt = O.OptConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                      weight_decay=0.0)
+    state = O.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(30):
+        g = jax.grad(loss)(params)
+        params, state, _ = O.update(opt, g, state, params)
+    assert float(loss(params)) < l0 * 0.5

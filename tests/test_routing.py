@@ -1,0 +1,118 @@
+"""Routing-core behaviour: routers, evaluation protocol, diagnostics."""
+import numpy as np
+import pytest
+
+from repro.core import eval as E
+from repro.core.dataset import RoutingDataset
+from repro.core.diagnostics import (knn_confidence, locality_check,
+                                    twonn_intrinsic_dim)
+from repro.core.routers import PAPER_ORDER, make_router
+from repro.data.synthetic import GenSpec, generate
+from repro.data.prices import ROUTERBENCH
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(GenSpec(name="t", models=ROUTERBENCH["RouterBench"],
+                            n_queries=800, seed=3))
+
+
+def test_dataset_split_disjoint(ds):
+    tr, va, te = set(ds.train_idx), set(ds.val_idx), set(ds.test_idx)
+    assert not (tr & va) and not (tr & te) and not (va & te)
+    assert len(tr) + len(va) + len(te) == len(ds.embeddings)
+
+
+def test_oracle_dominates_and_random_is_floor(ds):
+    oracle = E.oracle_auc(ds)["auc"]
+    rand = E.random_auc(ds)["auc"]
+    knn = E.utility_auc(make_router("knn100").fit(ds), ds)["auc"]
+    assert rand < knn <= oracle + 1e-6
+
+
+@pytest.mark.parametrize("name", ["knn10", "knn100", "linear", "linear_mf",
+                                  "mlp", "mlp_mf", "graph10", "attn10",
+                                  "dattn10"])
+def test_router_fit_predict_shapes(name, ds):
+    r = make_router(name, **({"epochs": 5}
+                             if name not in ("knn10", "knn100", "linear")
+                             else {}))
+    r.fit(ds)
+    X = ds.part("test")[0]
+    s, c = r.predict_utility(X)
+    assert s.shape == (len(X), ds.n_models)
+    assert c.shape == (len(X), ds.n_models)
+    assert np.all(np.isfinite(s)) and np.all(np.isfinite(c))
+
+
+def test_knn_beats_random_clearly(ds):
+    r = make_router("knn100").fit(ds)
+    auc = E.utility_auc(r, ds)["auc"]
+    rand = E.random_auc(ds)["auc"]
+    assert auc > rand + 10
+
+
+def test_knn_selection_votes(ds):
+    r = make_router("knn10")
+    lam = 0.5 / ds.c_max
+    r.fit_selection(ds, lam)
+    X = ds.part("test")[0]
+    choice = r.select(X)
+    assert choice.shape == (len(X),)
+    assert choice.min() >= 0 and choice.max() < ds.n_models
+
+
+def test_selection_protocol(ds):
+    su = E.selection_utility(lambda: make_router("knn10"), ds)
+    assert set(su) == {"high-performance", "balanced", "low-cost", "avg"}
+    assert all(np.isfinite(v) for v in su.values())
+
+
+def test_hull_auc_basics():
+    pts = np.array([[0.1, 0.5], [0.5, 0.8], [0.9, 0.6]])
+    auc = E.hull_auc(pts, c_norm=1.0)
+    assert 0 < auc <= 100
+    # adding a dominated point must not change the hull AUC
+    pts2 = np.vstack([pts, [[0.5, 0.1]]])
+    assert abs(E.hull_auc(pts2, 1.0) - auc) < 1e-9
+    # adding a dominating point must not decrease it
+    pts3 = np.vstack([pts, [[0.05, 0.9]]])
+    assert E.hull_auc(pts3, 1.0) >= auc - 1e-9
+
+
+def test_locality_check_negative_correlation(ds):
+    loc = locality_check(ds.embeddings, ds.scores, seed=1)
+    assert loc["pearson_r"] < -0.3     # locality holds by construction
+
+
+def test_twonn_under_ambient(ds):
+    d = twonn_intrinsic_dim(ds.embeddings)
+    assert 1.0 < d < ds.dim / 4        # far below ambient 768
+
+
+def test_knn_confidence_monotone():
+    train_kth = np.linspace(0.2, 0.9, 100)
+    q = np.array([0.1, 0.5, 0.95])
+    conf = knn_confidence(q, train_kth)
+    assert conf[0] <= conf[1] <= conf[2]
+
+
+def test_ood_protocol_dataset_shapes(ds):
+    other = generate(GenSpec(name="t2", models=ROUTERBENCH["RouterBench"],
+                             n_queries=400, seed=5, cluster_offset=3.0))
+    ood = ds.with_ood_test(other)
+    assert len(ood.test_idx) == 400
+    X, S, C = ood.part("train")
+    assert len(X) == len(ds.train_idx)
+    r = make_router("knn10").fit(ood)
+    auc = E.utility_auc(r, ood)["auc"]
+    assert np.isfinite(auc)
+
+
+def test_embedding_variant_preserves_outcomes(ds):
+    from repro.data.synthetic import embedding_variant
+    v = embedding_variant(ds, 1024, 0.01)
+    assert v.embeddings.shape[1] == 1024
+    np.testing.assert_array_equal(v.scores, ds.scores)
+    r = make_router("knn10").fit(v)
+    assert E.utility_auc(r, v)["auc"] > E.random_auc(v)["auc"]

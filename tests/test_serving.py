@@ -1,0 +1,103 @@
+"""Serving-layer behaviour: engine continuous batching, router service."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.dataset import RoutingDataset
+from repro.core.routers.knn import KNNRouter
+from repro.serving import encoder
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router_service import RouterService
+from repro.serving.scheduler import WaveScheduler
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    cfg = reduced(get_config("qwen3-4b"))
+    return ServingEngine(cfg, max_slots=2, cache_len=48, seed=0)
+
+
+def test_engine_completes_requests(small_engine):
+    reqs = [Request(uid=i, prompt_tokens=np.arange(3) + i,
+                    max_new_tokens=4) for i in range(5)]
+    small_engine.run_until_drained(list(reqs))
+    assert all(r.done for r in reqs)
+    assert all(len(r.output_tokens) == 4 for r in reqs)
+
+
+def test_engine_is_deterministic():
+    cfg = reduced(get_config("qwen3-4b"))
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(cfg, max_slots=2, cache_len=48, seed=0)
+        r = Request(uid=0, prompt_tokens=np.array([5, 7, 9]),
+                    max_new_tokens=6)
+        eng.run_until_drained([r])
+        outs.append(tuple(r.output_tokens))
+    assert outs[0] == outs[1]
+
+
+def test_continuous_batching_interleaves():
+    """A request admitted mid-flight must produce the same tokens as one
+    served alone (per-slot positions isolate the slots)."""
+    cfg = reduced(get_config("qwen3-4b"))
+    eng = ServingEngine(cfg, max_slots=2, cache_len=48, seed=0)
+    r1 = Request(uid=1, prompt_tokens=np.array([3, 4, 5]), max_new_tokens=6)
+    eng.admit(r1)
+    eng.step(); eng.step()
+    r2 = Request(uid=2, prompt_tokens=np.array([10, 11]), max_new_tokens=4)
+    eng.admit(r2)
+    eng.run_until_drained([])
+    solo = ServingEngine(cfg, max_slots=2, cache_len=48, seed=0)
+    r2s = Request(uid=3, prompt_tokens=np.array([10, 11]), max_new_tokens=4)
+    solo.run_until_drained([r2s])
+    assert r2.output_tokens == r2s.output_tokens
+
+
+def test_encoder_deterministic_and_normalized():
+    e1 = encoder.embed_texts(["hello world", "another query"])
+    e2 = encoder.embed_texts(["hello world", "another query"])
+    np.testing.assert_array_equal(e1, e2)
+    np.testing.assert_allclose(np.linalg.norm(e1, axis=1), 1.0, rtol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def service():
+    names = ["qwen3-4b", "mamba2-370m"]
+    engines = {}
+    for i, n in enumerate(names):
+        cfg = reduced(get_config(n))
+        engines[n] = ServingEngine(cfg, max_slots=2, cache_len=48, seed=i)
+    texts = [f"topic {i % 4} example {i}" for i in range(80)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(0)
+    ds = RoutingDataset("svc", emb,
+                        rng.uniform(0.2, 1.0, (80, 2)).astype(np.float32),
+                        rng.uniform(0.001, 0.01, (80, 2)).astype(np.float32),
+                        names)
+    router = KNNRouter(k=5).fit(ds)
+    return RouterService(router, engines, lam=1.0)
+
+
+def test_router_service_end_to_end(service):
+    results = service.serve_texts(["topic 1 question", "topic 3 question"],
+                                  max_new_tokens=3)
+    assert all(r.request.done for r in results)
+    assert all(len(r.request.output_tokens) == 3 for r in results)
+    assert all(r.model in service.engines for r in results)
+    assert all(r.confidence is not None for r in results)
+
+
+def test_scheduler_drains():
+    cfg = reduced(get_config("qwen3-4b"))
+    engines = {"a": ServingEngine(cfg, max_slots=2, cache_len=32, seed=0),
+               "b": ServingEngine(cfg, max_slots=1, cache_len=32, seed=1)}
+    sched = WaveScheduler(engines)
+    reqs = []
+    for i in range(6):
+        r = Request(uid=i, prompt_tokens=np.array([1 + i]), max_new_tokens=3)
+        reqs.append(r)
+        sched.enqueue("a" if i % 2 else "b", r)
+    stats = sched.drain()
+    assert all(r.done for r in reqs)
+    assert stats.admitted == 6
