@@ -28,8 +28,8 @@ _EPOCHS = {
 
 def bench_router(name: str):
     """Router with benchmark-scale training epochs."""
-    if name in ("knn10", "knn100", "linear"):
-        return make_router(name)
+    if name.startswith("knn") or name == "linear":
+        return make_router(name)          # non-parametric: no epochs knob
     epochs = max(5, int(_EPOCHS[name] * SCALE))
     return make_router(name, epochs=epochs)
 

@@ -23,17 +23,19 @@ def main() -> None:
                     help="comma-separated subset, e.g. table2,fig1")
     args = ap.parse_args()
 
-    from . import (bandit_online, fig1_locality, intrinsic_dim, seed_stability,
-                   table2_text_auc, table3_latency, table4_ood,
-                   table5_vlm_auc, tableD_selection, tableF_scaling,
-                   tableI_embeddings, thm72_sample_complexity)
+    from . import (bandit_online, fig1_locality, intrinsic_dim, ivf_recall,
+                   seed_stability, table2_text_auc, table3_latency,
+                   table4_ood, table5_vlm_auc, tableD_selection,
+                   tableF_scaling, tableI_embeddings,
+                   thm72_sample_complexity)
 
     # quick mode exercises the harness end-to-end on the fast tables; the
     # complete 12-router Tables 2/4/5/D/I ship in results/ from `--full`.
     quick_default = ["fig1", "intrinsic", "tableF", "seeds", "table3"]
     full_suite = quick_default + ["table4", "table5", "tableD", "tableI",
-                                  "seeds", "bandit"]
+                                  "seeds", "bandit", "ivf"]
     jobs = {
+        "ivf": ivf_recall.run,
         "table2": table2_text_auc.run,
         "table3": table3_latency.run,
         "table4": table4_ood.run,
@@ -53,7 +55,7 @@ def main() -> None:
         # quick mode: the simple-method subset (full 12-router sweep via
         # --full; its CSVs ship under results/)
         os.environ["REPRO_BENCH_ROUTERS"] = (
-            "knn10,knn100,linear,linear_mf,mlp,mlp_mf")
+            "knn10,knn100,knn10_ivf,knn100_ivf,linear,linear_mf,mlp,mlp_mf")
 
     print("name,us_per_call,derived")
     for name in selected:

@@ -1,5 +1,9 @@
 """Table 3 / G.1: cumulative routing (inference) time over the RouterBench
-test sets — training/index-build excluded, exactly as in the paper."""
+test sets — training/index-build excluded, exactly as in the paper.
+
+Beyond the paper's router set we also time the IVF-approximate kNN backends
+(``knn10_ivf``/``knn100_ivf``): same routing semantics, sub-linear retrieval
+(see `benchmarks/ivf_recall.py` for the recall/speedup trade-off sweep)."""
 from __future__ import annotations
 
 import time
@@ -14,7 +18,7 @@ from .common import RESULTS, bench_router, routers_from_env, write_csv
 
 def run(seed: int = 0):
     tasks = routerbench_tasks()
-    router_names = routers_from_env(PAPER_ORDER)
+    router_names = routers_from_env(PAPER_ORDER + ["knn10_ivf", "knn100_ivf"])
     rows = []
     for rn in router_names:
         per_task = []

@@ -11,6 +11,8 @@ from .bandit import LinUCBRouter
 REGISTRY = {
     "knn10": lambda: KNNRouter(k=10),
     "knn100": lambda: KNNRouter(k=100),
+    "knn10_ivf": lambda: KNNRouter(k=10, index="ivf"),
+    "knn100_ivf": lambda: KNNRouter(k=100, index="ivf"),
     "linear": lambda: LinearRouter(),
     "linear_mf": lambda: LinearMFRouter(),
     "mlp": lambda: MLPRouter(),
@@ -37,6 +39,8 @@ def _make_kw(name, **kw):
     from . import knn, linear, mf, mlp, graph, attentive
     classes = {
         "knn10": (knn.KNNRouter, {"k": 10}), "knn100": (knn.KNNRouter, {"k": 100}),
+        "knn10_ivf": (knn.KNNRouter, {"k": 10, "index": "ivf"}),
+        "knn100_ivf": (knn.KNNRouter, {"k": 100, "index": "ivf"}),
         "linear": (linear.LinearRouter, {}),
         "linear_mf": (mf.LinearMFRouter, {}), "mlp": (mlp.MLPRouter, {}),
         "mlp_mf": (mf.MLPMFRouter, {}),

@@ -5,17 +5,29 @@ Utility prediction:  s_hat(x,m) = mean over k nearest support rows of s(xi,m)
 Model selection:     majority vote among the neighbours' utility-optimal
 models at the given lambda.
 
-Retrieval runs through the fused Pallas kNN kernel (`repro.kernels.knn_topk`)
-— interpret-mode on CPU, compiled on TPU — or, when a mesh is supplied, the
-mesh-sharded exact kNN (`repro.core.sharded_knn`): the support set is
-row-sharded across all devices and per-device top-k results are merged with
-one tiny all-gather.
+Retrieval backends (``index=``):
+
+  * ``"exact"`` — brute-force fused Pallas kNN (`repro.kernels.knn_topk`),
+    interpret-mode on CPU, compiled on TPU; O(N*D) per query.
+  * ``"ivf"``  — inverted-file approximate kNN (`repro.kernels.knn_ivf`):
+    a spherical k-means coarse quantizer fit once at ``fit`` time, queries
+    probe only their ``nprobe`` nearest cluster lists; O(nprobe * N/C * D)
+    per query, sub-linear in the support size.
+
+When a mesh is supplied, both backends go through their mesh-sharded
+variants in `repro.core.sharded_knn` (support rows / cluster lists sharded
+across every device, per-device top-k merged with one tiny all-gather).
+
+``predict_utility`` / ``select`` / ``confidence`` semantics are identical
+across backends: IVF can return fewer than k valid neighbours on pathological
+probe sets (index -1 slots), which are excluded from averages and votes.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.kernels.knn_ivf.ops import DEFAULT_NPROBE, build_ivf_index, ivf_topk
 from repro.kernels.knn_topk.ops import knn_topk
 from ..dataset import RoutingDataset
 from .base import Router, gold_labels, normalize_rows
@@ -26,26 +38,44 @@ class KNNRouter(Router):
 
     def __init__(self, k: int = 100, weights: str = "uniform",
                  use_pallas: bool = False, temperature: float = 20.0,
-                 mesh=None):
+                 mesh=None, index: str = "exact",
+                 n_clusters: int | None = None,
+                 nprobe: int = DEFAULT_NPROBE):
+        if index not in ("exact", "ivf"):
+            raise ValueError(f"index must be 'exact' or 'ivf', got {index!r}")
         self.k = k
         self.weights = weights
         self.use_pallas = use_pallas
         self.temperature = temperature
         self.mesh = mesh
-        self.name = f"kNN (k={k})"
+        self.index = index
+        self.n_clusters = n_clusters
+        self.nprobe = nprobe
+        self.name = f"kNN (k={k})" + (" IVF" if index == "ivf" else "")
 
-    # ---- fit = store the support set (no training) ----
+    # ---- fit = store the support set (+ IVF coarse quantizer) ----
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
         X, S, C = ds.part("train")
         self._X = normalize_rows(X)
         self._S = S.astype(np.float32)
         self._C = C.astype(np.float32)
+        if self.index == "ivf":
+            self._ivf = build_ivf_index(self._X, self.n_clusters, seed=seed)
         return self
 
     def _neighbors(self, X: np.ndarray):
         q = normalize_rows(X)
         k = min(self.k, len(self._X))
-        if self.mesh is not None:
+        if self.index == "ivf":
+            if self.mesh is not None:
+                from ..sharded_knn import sharded_ivf_topk
+                sims, idx = sharded_ivf_topk(jnp.asarray(q), self._ivf, k,
+                                             self.mesh, nprobe=self.nprobe)
+            else:
+                sims, idx = ivf_topk(jnp.asarray(q), self._ivf, k,
+                                     nprobe=self.nprobe,
+                                     use_pallas=self.use_pallas)
+        elif self.mesh is not None:
             from ..sharded_knn import sharded_knn_topk
             sims, idx = sharded_knn_topk(jnp.asarray(q), jnp.asarray(self._X),
                                          k, self.mesh)
@@ -57,16 +87,19 @@ class KNNRouter(Router):
     # ---- utility ----
     def predict_utility(self, X: np.ndarray):
         sims, idx = self._neighbors(X)
-        s_nb = self._S[idx]                     # (Q, k, M)
-        c_nb = self._C[idx]
+        valid = idx >= 0                        # IVF may return short lists
+        s_nb = self._S[np.maximum(idx, 0)]      # (Q, k, M)
+        c_nb = self._C[np.maximum(idx, 0)]
         if self.weights == "softmax":
-            w = np.exp(self.temperature * (sims - sims.max(1, keepdims=True)))
-            w /= w.sum(1, keepdims=True)
-            s_hat = np.einsum("qk,qkm->qm", w, s_nb)
-            c_hat = np.einsum("qk,qkm->qm", w, c_nb)
+            fin = np.where(valid, sims, -np.inf)
+            mx = fin.max(1, keepdims=True)
+            mx = np.where(np.isfinite(mx), mx, 0.0)   # all-invalid guard
+            w = np.exp(self.temperature * (fin - mx))
+            w /= np.maximum(w.sum(1, keepdims=True), 1e-12)
         else:
-            s_hat = s_nb.mean(axis=1)
-            c_hat = c_nb.mean(axis=1)
+            w = valid / np.maximum(valid.sum(1, keepdims=True), 1)
+        s_hat = np.einsum("qk,qkm->qm", w, s_nb)
+        c_hat = np.einsum("qk,qkm->qm", w, c_nb)
         return s_hat, c_hat
 
     # ---- selection: neighbour majority vote ----
@@ -78,17 +111,25 @@ class KNNRouter(Router):
 
     def select(self, X: np.ndarray) -> np.ndarray:
         _, idx = self._neighbors(X)
-        votes = self._train_best[idx]           # (Q, k)
+        valid = idx >= 0
+        votes = self._train_best[np.maximum(idx, 0)]   # (Q, k)
         M = self._S.shape[1]
-        counts = np.stack([(votes == m).sum(1) for m in range(M)], axis=1)
+        counts = np.stack([((votes == m) & valid).sum(1) for m in range(M)],
+                          axis=1)
         return np.argmax(counts, axis=1)
 
     # ---- practitioner diagnostics (§8): per-query confidence ----
     def confidence(self, X: np.ndarray):
         """Returns (kth_sim, neighbour_agreement) per query: low kth-neighbour
-        similarity => sparse coverage; low agreement => uncertainty."""
+        similarity => sparse coverage; low agreement => uncertainty.  With an
+        IVF backend a -inf kth_sim flags a query whose probe set could not
+        fill k neighbours — out-of-coverage by construction."""
         sims, idx = self._neighbors(X)
         kth = sims[:, -1]
-        best = np.argmax(self._S[idx] - 0.0 * self._C[idx], axis=2)  # (Q,k)
-        mode_frac = np.array([np.bincount(b).max() / len(b) for b in best])
+        valid = idx >= 0
+        best = np.argmax(self._S[np.maximum(idx, 0)]
+                         - 0.0 * self._C[np.maximum(idx, 0)], axis=2)  # (Q,k)
+        mode_frac = np.array(
+            [np.bincount(b[v]).max() / max(v.sum(), 1) if v.any() else 0.0
+             for b, v in zip(best, valid)])
         return kth, mode_frac

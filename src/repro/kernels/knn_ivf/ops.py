@@ -1,0 +1,329 @@
+"""IVF index build + public dispatcher for approximate kNN retrieval.
+
+``build_ivf_index`` fits a spherical k-means coarse quantizer (numpy Lloyd
+iterations — this runs once at ``KNNRouter.fit`` time) and lays the support
+set out cluster-major: ``sup_cm (C, L, D)`` raw rows zero-padded to the list
+length L, ``ids_cm (C, L)`` original row ids with -1 padding, and
+``inv_cm (C, L)`` precomputed inverse row norms (so queries never re-reduce
+N*D elements).  Oversized clusters are recursively halved along their top
+principal direction until every list fits ``balance * N/C`` rows: L — and
+with it the per-probe gather/DMA volume — is bounded by the MEAN list size,
+not the worst k-means cell.
+
+``ivf_topk`` probes each query's top-``nprobe`` centroids and scores only
+those lists.  Both execution paths share one tiling strategy: queries are
+SORTED by their primary cluster so that a tile of ``block_q`` queries probes
+few distinct lists, the per-tile slot lists (deduplicated union, padded to a
+static width S) are planned on the host, and then
+
+  * the jnp path gathers each tile's slot lists once and scores them with a
+    single batched matmul (tile-coherent inverted traversal);
+  * the Pallas path scalar-prefetches the slot lists so the kernel DMAs
+    exactly the probed blocks (`kernel.py`).
+
+Per-query cost is O(nprobe * L * D) against the brute-force O(N * D);
+``nprobe == n_clusters`` recovers the exact result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import ivf_topk_pallas
+from .ref import ivf_probe
+
+DEFAULT_NPROBE = 8
+_LANE_PAD = 8       # list-length rounding; bump to 128 for compiled TPU runs
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    """Immutable retrieval index over one support set.  Device (jnp) arrays
+    feed the Pallas / tiled-XLA / sharded paths; the host (numpy) mirrors —
+    zero extra build cost, the index is assembled in numpy anyway — feed the
+    CPU inverted-traversal backend without a device round-trip."""
+    centroids: jnp.ndarray     # (C, D) f32, unit-norm
+    sup_cm: jnp.ndarray        # (C, L, D) f32, raw rows, zero padding
+    ids_cm: jnp.ndarray        # (C, L) i32, -1 padding
+    inv_cm: jnp.ndarray        # (C, L) f32, 1/||row||, 0 padding
+    n_rows: int                # valid support rows
+    sup_h: np.ndarray          # host mirror of sup_cm
+    ids_h: np.ndarray          # host mirror of ids_cm
+    inv_h: np.ndarray          # host mirror of inv_cm
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def list_size(self) -> int:
+        return self.sup_cm.shape[1]
+
+
+def default_n_clusters(n_rows: int) -> int:
+    """~sqrt(N) lists — the classical IVF balance point where probe cost
+    (nprobe * N/C) and quantizer cost (C) meet."""
+    return int(np.clip(round(math.sqrt(max(n_rows, 1))), 1, 4096))
+
+
+def _spherical_kmeans(xn: np.ndarray, n_clusters: int, seed: int,
+                      iters: int) -> tuple[np.ndarray, np.ndarray]:
+    """Lloyd iterations on unit-norm rows with cosine assignment.  Empty
+    clusters are reseeded from the rows worst-served by their centroid."""
+    rng = np.random.default_rng(seed)
+    n = len(xn)
+    cent = xn[rng.choice(n, size=n_clusters, replace=False)].copy()
+    assign = np.zeros(n, np.int64)
+    for _ in range(iters):
+        cs = xn @ cent.T                        # (N, C)
+        assign = np.argmax(cs, axis=1)
+        best = cs[np.arange(n), assign]
+        worst = np.argsort(best, kind="stable") # rows worst-served first
+        w = 0
+        for c in range(n_clusters):
+            members = assign == c
+            if not members.any():
+                # reseed each empty cluster from a DISTINCT worst-served row
+                # (a shared reseed row would keep the duplicates collapsed)
+                cent[c] = xn[worst[w]]
+                w += 1
+                continue
+            m = xn[members].mean(axis=0)
+            cent[c] = m / max(float(np.linalg.norm(m)), 1e-12)
+    assign = np.argmax(xn @ cent.T, axis=1)
+    return cent.astype(np.float32), assign
+
+
+def _top_pc(x: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Top principal direction of x's rows (3 power iterations)."""
+    xc = x - x.mean(axis=0)
+    v = rng.normal(size=x.shape[1]).astype(np.float32)
+    for _ in range(3):
+        v = xc.T @ (xc @ v)
+        v /= max(float(np.linalg.norm(v)), 1e-12)
+    return v
+
+
+def _halve_by_top_pc(x: np.ndarray, rows: np.ndarray,
+                     rng: np.random.Generator):
+    """Split rows into two equal halves by the median projection onto the
+    members' top principal direction."""
+    order = np.argsort(x @ _top_pc(x, rng), kind="stable")
+    half = len(rows) // 2
+    return rows[order[:half]], rows[order[half:]]
+
+
+def _balanced_lists(xn: np.ndarray, assign: np.ndarray, n_clusters: int,
+                    cap: int, seed: int):
+    """Cluster member lists with every list <= cap rows: oversized k-means
+    cells are recursively halved along their top principal direction."""
+    rng = np.random.default_rng(seed + 1)
+    queue = [np.flatnonzero(assign == c) for c in range(n_clusters)]
+    queue = [r for r in queue if len(r)]
+    lists = []
+    while queue:
+        rows = queue.pop()
+        if len(rows) <= cap:
+            lists.append(rows)
+        else:
+            queue.extend(_halve_by_top_pc(xn[rows], rows, rng))
+    return lists
+
+
+def build_ivf_index(support, n_clusters: int | None = None, seed: int = 0,
+                    iters: int = 10, balance: float = 1.5) -> IVFIndex:
+    """support (N, D) raw rows (normalized internally for clustering only —
+    scoring keeps the raw rows so results match `knn_topk` bit-for-bit).
+    ``n_clusters`` is a TARGET: oversized k-means cells are split until no
+    list exceeds ``balance * N/n_clusters`` rows, so the final cluster count
+    can be somewhat higher."""
+    sup = np.asarray(support, np.float32)
+    n, d = sup.shape
+    c = min(n_clusters or default_n_clusters(n), n)
+    norms = np.maximum(np.linalg.norm(sup, axis=1, keepdims=True), 1e-12)
+    xn = sup / norms
+    cent, assign = _spherical_kmeans(xn, c, seed, iters)
+
+    cap = max(_LANE_PAD, int(math.ceil(balance * n / c)))
+    lists = _balanced_lists(xn, assign, c, cap, seed)
+    c = len(lists)
+    # relabel clusters along their top principal direction: cluster ids are
+    # otherwise arbitrary, and the query sort in `ivf_topk` relies on nearby
+    # ids meaning nearby clusters so query tiles share slot lists
+    cents0 = np.stack([xn[r].mean(axis=0) for r in lists])
+    rngv = np.random.default_rng(seed + 2)
+    perm = np.argsort(cents0 @ _top_pc(cents0, rngv), kind="stable")
+    lists = [lists[i] for i in perm]
+    cents0 = cents0[perm]
+    lsz = int(np.ceil(max(max(len(r) for r in lists), 1)
+                      / _LANE_PAD) * _LANE_PAD)
+    centroids = np.zeros((c, d), np.float32)
+    sup_cm = np.zeros((c, lsz, d), np.float32)
+    ids_cm = np.full((c, lsz), -1, np.int32)
+    inv_cm = np.zeros((c, lsz), np.float32)
+    for ci, rows in enumerate(lists):
+        centroids[ci] = cents0[ci] / max(float(np.linalg.norm(cents0[ci])),
+                                         1e-12)
+        sup_cm[ci, :len(rows)] = sup[rows]
+        ids_cm[ci, :len(rows)] = rows
+        inv_cm[ci, :len(rows)] = 1.0 / norms[rows, 0]
+    return IVFIndex(jnp.asarray(centroids), jnp.asarray(sup_cm),
+                    jnp.asarray(ids_cm), jnp.asarray(inv_cm), n,
+                    sup_cm, ids_cm, inv_cm)
+
+
+def plan_tile_probes(q_probe: np.ndarray, block_q: int):
+    """Deduplicate each query tile's probe set into static-width slot lists.
+
+    Returns (tile_probe (T, S), tile_valid (T, S)) where S is the max union
+    size over tiles; padded slots repeat the tile's first cluster and carry
+    valid=0 so consumers skip them without double-counting.  Callers sort
+    queries by primary cluster first, which keeps S near nprobe instead of
+    block_q * nprobe."""
+    qn = len(q_probe)
+    tiles = [q_probe[t:t + block_q] for t in range(0, qn, block_q)]
+    uniques = [np.unique(t[t >= 0]) for t in tiles]
+    s = max(1, max(len(u) for u in uniques))
+    tile_probe = np.zeros((len(tiles), s), np.int32)
+    tile_valid = np.zeros((len(tiles), s), np.int32)
+    for ti, u in enumerate(uniques):
+        if len(u) == 0:              # all-padding tile: probe list 0, masked
+            continue
+        tile_probe[ti, :len(u)] = u
+        tile_probe[ti, len(u):] = u[0]
+        tile_valid[ti, :len(u)] = 1
+    return tile_probe, tile_valid
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq"))
+def _score_tiles(queries, q_probe, tile_probe, tile_valid,
+                 sup_cm, ids_cm, inv_cm, k: int, bq: int):
+    """Tile-coherent inverted traversal (jnp twin of the Pallas kernel):
+    gather each tile's slot lists ONCE, score the whole tile against them
+    with one batched matmul, then mask every query down to the rows of its
+    own probe set."""
+    qp, d = queries.shape
+    t, s = tile_probe.shape
+    l = sup_cm.shape[1]
+    p = q_probe.shape[1]
+
+    lists = jnp.take(sup_cm, tile_probe, axis=0)             # (T, S, L, D)
+    ids = jnp.take(ids_cm, tile_probe, axis=0)               # (T, S, L)
+    inv = jnp.take(inv_cm, tile_probe, axis=0)               # (T, S, L)
+    qt = queries.reshape(t, bq, d)
+    sims = jax.lax.dot_general(qt, lists.reshape(t, s * l, d),
+                               (((2,), (2,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+    sims = sims * inv.reshape(t, 1, s * l)                   # (T, BQ, S*L)
+
+    probed = jnp.any(q_probe.reshape(t, bq, p, 1)
+                     == tile_probe.reshape(t, 1, 1, s), axis=2)  # (T, BQ, S)
+    ok = (probed & (tile_valid != 0).reshape(t, 1, s))[..., None] \
+        & (ids >= 0).reshape(t, 1, s, l)
+    sims = jnp.where(ok.reshape(t, bq, s * l), sims, -jnp.inf)
+
+    scores, pos = jax.lax.top_k(sims, k)                     # (T, BQ, k)
+    cand_i = jnp.broadcast_to(ids.reshape(t, 1, s * l), sims.shape)
+    idx = jnp.take_along_axis(cand_i, pos, axis=2)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores.reshape(qp, k), idx.reshape(qp, k).astype(jnp.int32)
+
+
+def _score_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFIndex,
+                      k: int):
+    """CPU inverted-list traversal: (query, probe) PAIRS are sorted by
+    cluster, and each cluster's contiguous pair segment is scored with one
+    BLAS matmul against the cluster's rows IN PLACE — no (Q, P, L, D)
+    support gather ever materializes, no tile-union waste: exactly
+    Q * nprobe * L * D MACs and each probed list is read once."""
+    qn, _ = q.shape
+    p = q_probe.shape[1]
+    c, l, _ = index.sup_h.shape
+    pair_c = q_probe.reshape(-1)                       # (Q*P,)
+    pair_q = np.repeat(np.arange(qn), p)
+    order = np.argsort(pair_c, kind="stable")
+    sorted_c = pair_c[order]
+    qs = q[pair_q[order]]                              # (Q*P, D)
+
+    sims_sorted = np.empty((qn * p, l), np.float32)
+    starts = np.searchsorted(sorted_c, np.arange(c))
+    ends = np.searchsorted(sorted_c, np.arange(c), side="right")
+    for ci in np.unique(sorted_c):
+        s0, s1 = starts[ci], ends[ci]
+        sims_sorted[s0:s1] = qs[s0:s1] @ index.sup_h[ci].T
+    inv_pairs = index.inv_h[sorted_c]                  # (Q*P, L)
+    sims_sorted *= inv_pairs
+    sims_sorted[inv_pairs == 0] = -np.inf              # list padding rows
+
+    sims = np.empty_like(sims_sorted)
+    sims[order] = sims_sorted                          # back to query-major
+    sims = sims.reshape(qn, p * l)
+    ids = index.ids_h[pair_c].reshape(qn, p * l)
+    if k < p * l:
+        part = np.argpartition(-sims, k - 1, axis=1)[:, :k]
+    else:
+        part = np.broadcast_to(np.arange(p * l), (qn, p * l))
+    psims = np.take_along_axis(sims, part, axis=1)
+    order2 = np.argsort(-psims, axis=1, kind="stable")[:, :k]
+    top = np.take_along_axis(part, order2, axis=1)
+    scores = np.take_along_axis(sims, top, axis=1)
+    idx = np.take_along_axis(ids, top, axis=1).astype(np.int32)
+    idx[~np.isfinite(scores)] = -1
+    return jnp.asarray(scores), jnp.asarray(idx)
+
+
+def ivf_topk(queries, index: IVFIndex, k: int,
+             nprobe: int = DEFAULT_NPROBE, *, use_pallas: bool = False,
+             backend: str | None = None, interpret: bool = True,
+             block_q: int = 32):
+    """queries (Q, D) L2-normalized.  Returns (scores (Q, k), indices (Q, k))
+    — indices into the original support row order; slots beyond the number
+    of valid candidates hold -inf / -1.
+
+    backend: 'host' (CPU BLAS inverted traversal — default), 'tiles'
+    (jittable XLA twin of the kernel's tiling), or 'pallas' (the kernel;
+    also selected by use_pallas=True).  All three implement identical
+    per-query top-nprobe semantics."""
+    Q, _ = queries.shape
+    nprobe = max(1, min(nprobe, index.n_clusters))
+    k = min(k, index.n_rows, nprobe * index.list_size)
+    backend = backend or ("pallas" if use_pallas else "host")
+    queries = jnp.asarray(queries)
+    q_probe = np.asarray(ivf_probe(queries, index.centroids, nprobe))
+
+    if backend == "host":
+        return _score_pairs_host(np.asarray(queries, np.float32), q_probe,
+                                 index, k)
+
+    # sort queries by primary cluster: tiles become probe-coherent, so the
+    # static slot width S stays near nprobe instead of block_q * nprobe
+    # (build_ivf_index orders cluster ids along the centroids' top principal
+    # direction, so nearby ids are nearby clusters)
+    order = np.argsort(q_probe[:, 0], kind="stable")
+    inv_order = np.argsort(order, kind="stable")
+    bq = min(block_q, Q)
+    pq = (-Q) % bq
+    qp_sorted = np.pad(q_probe[order], ((0, pq), (0, 0)), constant_values=-1)
+    q_sorted = jnp.pad(queries[jnp.asarray(order)], ((0, pq), (0, 0)))
+    tile_probe, tile_valid = plan_tile_probes(qp_sorted, bq)
+
+    if backend == "pallas":
+        scores, idx = ivf_topk_pallas(
+            q_sorted, index.sup_cm, index.ids_cm, index.inv_cm,
+            jnp.asarray(qp_sorted), jnp.asarray(tile_probe),
+            jnp.asarray(tile_valid), k, interpret=interpret)
+        scores = jnp.where(idx >= 0, scores, -jnp.inf)
+    elif backend == "tiles":
+        scores, idx = _score_tiles(
+            q_sorted, jnp.asarray(qp_sorted), jnp.asarray(tile_probe),
+            jnp.asarray(tile_valid), index.sup_cm, index.ids_cm,
+            index.inv_cm, k, bq)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    inv_order = jnp.asarray(inv_order)
+    return scores[inv_order], idx[inv_order]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for IVF (inverted-file) approximate top-k retrieval.
+
+Semantics (shared with the Pallas kernel in `kernel.py`):
+
+  * a spherical k-means coarse quantizer partitions the support set into C
+    lists, stored cluster-major as ``sup_cm (C, L, D)`` (raw rows, zero
+    padding) with original row ids in ``ids_cm (C, L)`` (-1 padding);
+  * each query probes its ``nprobe`` nearest centroids (by cosine score
+    against unit-norm centroids) and scores ONLY those lists — O(nprobe * L)
+    per query instead of O(N);
+  * scoring normalizes support rows on the fly exactly like
+    ``knn_topk_reference`` so exact and IVF scores are bit-comparable, and
+    ``nprobe == C`` recovers the brute-force result.
+
+Empty output slots (fewer than k valid candidates) carry score -inf and
+index -1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_probe(queries, centroids, nprobe: int):
+    """Per-query nprobe nearest coarse centroids.  queries (Q, D)
+    L2-normalized; centroids (C, D) unit-norm.  Returns ids (Q, nprobe) i32.
+    Uses lax.top_k so the probe set is identical everywhere it is computed
+    (ref, Pallas planner, sharded variant) including tie-breaks."""
+    cs = jax.lax.dot_general(queries.astype(jnp.float32), centroids,
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    _, probe = jax.lax.top_k(cs, min(nprobe, centroids.shape[0]))
+    return probe.astype(jnp.int32)
+
+
+def ivf_topk_reference(queries, centroids, sup_cm, ids_cm, k: int,
+                       nprobe: int):
+    """queries (Q, D) L2-normalized; centroids (C, D) unit-norm;
+    sup_cm (C, L, D) raw cluster-major support; ids_cm (C, L) i32 row ids
+    (-1 = padding).  Returns (scores (Q, k) f32 descending, indices (Q, k)
+    i32 into the ORIGINAL support row order; -inf/-1 for empty slots)."""
+    Q, _ = queries.shape
+    C, L, _ = sup_cm.shape
+    nprobe = min(nprobe, C)
+    q = queries.astype(jnp.float32)
+    probe = ivf_probe(q, centroids, nprobe)                 # (Q, P)
+
+    lists = jnp.take(sup_cm, probe, axis=0)                 # (Q, P, L, D)
+    ids = jnp.take(ids_cm, probe, axis=0)                   # (Q, P, L)
+    norm2 = jnp.sum(jnp.square(lists.astype(jnp.float32)), axis=-1)
+    sims = jnp.einsum("qd,qpld->qpl", q, lists,
+                      preferred_element_type=jnp.float32)
+    sims = sims * jax.lax.rsqrt(norm2 + 1e-12)
+    sims = jnp.where(ids >= 0, sims, -jnp.inf)
+
+    cand_s = sims.reshape(Q, nprobe * L)
+    cand_i = ids.reshape(Q, nprobe * L)
+    k = min(k, cand_s.shape[1])
+    scores, pos = jax.lax.top_k(cand_s, k)
+    idx = jnp.take_along_axis(cand_i, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores, idx.astype(jnp.int32)

@@ -20,6 +20,37 @@ from jax.experimental import pallas as pl
 NEG = -3.0e38  # python float: avoids captured-constant arrays in the kernel
 
 
+def merge_topk(cand_s, cand_i, k: int):
+    """Running top-k over a (BQ, n_cand) candidate tile using only
+    max/select/iota ops (Mosaic-safe: no sort / no lax.top_k).  Returns the
+    (BQ, k) best scores (descending) and their candidate ids.  Shared by the
+    brute-force kernel here and the IVF kernel (`knn_ivf/kernel.py`)."""
+    acc_s = jnp.full((cand_s.shape[0], k), NEG, cand_s.dtype)
+    acc_i = jnp.full((cand_i.shape[0], k), -1, cand_i.dtype)
+
+    def body(t, carry):
+        cs, ci, acc_s, acc_i = carry
+        m = jnp.max(cs, axis=1, keepdims=True)                     # (BQ, 1)
+        # argmax via masked iota-max (Mosaic-safe: max/select only)
+        pos_iota = jax.lax.broadcasted_iota(jnp.int32, cs.shape, 1)
+        am = jnp.max(jnp.where(cs >= m, pos_iota, -1), axis=1,
+                     keepdims=True)                                # (BQ, 1)
+        chosen_i = jnp.take_along_axis(ci, am, axis=1)             # (BQ, 1)
+        # exhausted rows (max == NEG sentinel) re-pick an already-taken
+        # position whose id column still holds a real row id; emit -1 so
+        # empty output slots never alias a real candidate
+        chosen_i = jnp.where(m > NEG / 2, chosen_i, -1)
+        acc_s = jax.lax.dynamic_update_slice(acc_s, m, (0, t))
+        acc_i = jax.lax.dynamic_update_slice(acc_i, chosen_i, (0, t))
+        hit = pos_iota == am
+        cs = jnp.where(hit, NEG, cs)
+        return cs, ci, acc_s, acc_i
+
+    _, _, acc_s, acc_i = jax.lax.fori_loop(
+        0, k, body, (cand_s, cand_i, acc_s, acc_i))
+    return acc_s, acc_i
+
+
 def _knn_kernel(q_ref, s_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
     j = pl.program_id(1)
 
@@ -40,25 +71,7 @@ def _knn_kernel(q_ref, s_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
 
     cand_s = jnp.concatenate([out_s_ref[...], sims], axis=1)       # (BQ, K+BN)
     cand_i = jnp.concatenate([out_i_ref[...], tile_idx], axis=1)
-
-    def body(t, carry):
-        cs, ci, acc_s, acc_i = carry
-        m = jnp.max(cs, axis=1, keepdims=True)                     # (BQ, 1)
-        # argmax via masked iota-max (Mosaic-safe: max/select only)
-        pos_iota = jax.lax.broadcasted_iota(jnp.int32, cs.shape, 1)
-        am = jnp.max(jnp.where(cs >= m, pos_iota, -1), axis=1,
-                     keepdims=True)                                # (BQ, 1)
-        chosen_i = jnp.take_along_axis(ci, am, axis=1)             # (BQ, 1)
-        acc_s = jax.lax.dynamic_update_slice(acc_s, m, (0, t))
-        acc_i = jax.lax.dynamic_update_slice(acc_i, chosen_i, (0, t))
-        hit = pos_iota == am
-        cs = jnp.where(hit, NEG, cs)
-        return cs, ci, acc_s, acc_i
-
-    acc_s = jnp.full_like(out_s_ref[...], NEG)
-    acc_i = jnp.full_like(out_i_ref[...], -1)
-    _, _, acc_s, acc_i = jax.lax.fori_loop(
-        0, k, body, (cand_s, cand_i, acc_s, acc_i))
+    acc_s, acc_i = merge_topk(cand_s, cand_i, k)
     out_s_ref[...] = acc_s
     out_i_ref[...] = acc_i
 

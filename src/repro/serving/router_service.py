@@ -7,6 +7,11 @@ serving deployment.
 Also surfaces the §8 practitioner diagnostics per query (kth-neighbour
 distance percentile + neighbourhood agreement) so callers can apply fallback
 policies on out-of-coverage queries.
+
+``knn_service`` builds the whole stack around a kNN router on either
+retrieval backend: ``index="exact"`` (brute-force Pallas scan) or
+``index="ivf"`` (inverted-file approximate retrieval — the deployment-scale
+path once the support set outgrows an O(N) per-query scan).
 """
 from __future__ import annotations
 
@@ -32,6 +37,15 @@ class RoutedResult:
     confidence: Optional[float] = None
 
 
+def knn_service(ds: RoutingDataset, engines: Dict[str, "ServingEngine"],
+                k: int = 100, index: str = "exact", lam: float = 0.0,
+                seed: int = 0, **router_kw) -> "RouterService":
+    """Fit a KNNRouter on ``ds`` (building the IVF coarse quantizer when
+    ``index='ivf'``) and wrap it in a RouterService over ``engines``."""
+    router = KNNRouter(k=k, index=index, **router_kw).fit(ds, seed=seed)
+    return RouterService(router, engines, lam=lam)
+
+
 class RouterService:
     def __init__(self, router: Router, engines: Dict[str, ServingEngine],
                  lam: float = 0.0, fallback_model: Optional[str] = None,
@@ -44,6 +58,11 @@ class RouterService:
         self.confidence_floor = confidence_floor
         self._uid = 0
         self.log: List[RoutedResult] = []
+
+    @property
+    def retrieval_backend(self) -> str:
+        """'exact' / 'ivf' for kNN routers, 'n/a' for parametric ones."""
+        return getattr(self.router, "index", "n/a")
 
     # ---- routing ----
     def route_embeddings(self, emb: np.ndarray) -> np.ndarray:

@@ -146,6 +146,42 @@ def test_dryrun_decode_mini_mesh_compiles():
 
 
 @pytest.mark.slow
+def test_sharded_ivf_matches_single_device():
+    """Cluster-sharded IVF (centroids replicated, lists row-sharded) must
+    reproduce the single-device IVF result exactly — every shard computes
+    the identical probe set, so the union of per-shard candidates is the
+    per-query candidate set — and probing every list must reproduce the
+    brute-force scan."""
+    res = run_sub("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_debug_mesh
+        from repro.core.sharded_knn import sharded_ivf_topk
+        from repro.kernels.knn_ivf.ops import build_ivf_index, ivf_topk
+        from repro.kernels.knn_topk.ref import knn_topk_reference
+        mesh = make_debug_mesh(2, 4)
+        key = jax.random.PRNGKey(0)
+        centers = jax.random.normal(key, (8, 32)) * 3
+        s = (centers[jax.random.randint(jax.random.fold_in(key, 1),
+                                        (4000,), 0, 8)]
+             + jax.random.normal(jax.random.fold_in(key, 2), (4000, 32)))
+        q = (centers[jax.random.randint(jax.random.fold_in(key, 3),
+                                        (32,), 0, 8)]
+             + jax.random.normal(jax.random.fold_in(key, 4), (32, 32)))
+        q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+        index = build_ivf_index(s, seed=0)
+        sc_loc, _ = ivf_topk(q, index, 10, nprobe=8)
+        sc_sh, _ = sharded_ivf_topk(q, index, 10, mesh, nprobe=8)
+        ok_ivf = bool(jnp.allclose(sc_sh, sc_loc, rtol=1e-5, atol=1e-5))
+        sc_all, _ = sharded_ivf_topk(q, index, 10, mesh,
+                                     nprobe=index.n_clusters)
+        sc_ref, _ = knn_topk_reference(q, s, 10)
+        ok_exact = bool(jnp.allclose(sc_all, sc_ref, rtol=1e-5, atol=1e-5))
+        print(json.dumps({"ok_ivf": ok_ivf, "ok_exact": ok_exact}))
+    """)
+    assert res["ok_ivf"] and res["ok_exact"]
+
+
+@pytest.mark.slow
 def test_sharded_knn_klocal_recall():
     """Truncated per-shard merge (k_local < k): recall@k stays ~1 with the
     collective cut by k/k_local (binomial-occupancy argument)."""

@@ -1,0 +1,161 @@
+"""IVF retrieval correctness: recall against the exact scan, monotonicity in
+nprobe, exactness at nprobe == n_clusters, and end-to-end routing parity of
+`KNNRouter(index="ivf")` with the exact router."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eval as E
+from repro.core.routers.knn import KNNRouter
+from repro.data.prices import ROUTERBENCH
+from repro.data.synthetic import GenSpec, generate
+from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, build_ivf_index,
+                                       default_n_clusters, ivf_topk)
+from repro.kernels.knn_topk.ref import knn_topk_reference
+
+KEY = jax.random.PRNGKey(0)
+K = 20
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    """Synthetic clustered support + queries from the same mixture — the
+    locality regime the paper's routing data lives in (Def 7.1)."""
+    kc, ks, ka, kq, kn = jax.random.split(KEY, 5)
+    centers = jax.random.normal(kc, (12, 48)) * 3.0
+    s = centers[jax.random.randint(ka, (3000,), 0, 12)] \
+        + jax.random.normal(ks, (3000, 48))
+    q = centers[jax.random.randint(kq, (200,), 0, 12)] \
+        + jax.random.normal(kn, (200, 48))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    index = build_ivf_index(s, seed=0)
+    _, exact_idx = knn_topk_reference(q, s, K)
+    exact_sets = [set(row) for row in np.asarray(exact_idx)]
+    return q, s, index, exact_sets
+
+
+def _recall(index, q, exact_sets, nprobe, **kw):
+    _, idx = ivf_topk(q, index, K, nprobe=nprobe, **kw)
+    got = np.asarray(idx)
+    return float(np.mean([len(exact_sets[i] & set(got[i])) / K
+                          for i in range(len(got))]))
+
+
+def test_recall_at_default_nprobe(clustered):
+    """Acceptance: recall@k >= 0.95 vs the exact scan at the default
+    nprobe, on every backend."""
+    q, _, index, exact_sets = clustered
+    for backend in ("host", "tiles", "pallas"):
+        r = _recall(index, q, exact_sets, DEFAULT_NPROBE, backend=backend)
+        assert r >= 0.95, (backend, r)
+
+
+def test_recall_monotone_in_nprobe(clustered):
+    """Per-query probe sets are nested in nprobe, so recall can only grow."""
+    q, _, index, exact_sets = clustered
+    probes = [1, 2, 4, 8, 16, index.n_clusters]
+    recalls = [_recall(index, q, exact_sets, p) for p in probes]
+    assert all(b >= a - 1e-12 for a, b in zip(recalls, recalls[1:])), recalls
+    assert recalls[-1] == 1.0
+
+
+def test_nprobe_all_matches_bruteforce(clustered):
+    """Probing every list IS the brute-force scan: scores must match the
+    exact reference and index sets must agree row-for-row."""
+    q, s, index, exact_sets = clustered
+    es, _ = knn_topk_reference(q, s, K)
+    for backend in ("host", "tiles"):
+        sc, ix = ivf_topk(q, index, K, nprobe=index.n_clusters,
+                          backend=backend)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(es),
+                                   rtol=1e-5, atol=1e-5)
+        got = np.asarray(ix)
+        assert all(set(got[i]) == exact_sets[i] for i in range(len(got)))
+
+
+def test_index_build_invariants(clustered):
+    """Every support row lands in exactly one list; lists respect the
+    balance cap; centroids are unit-norm."""
+    _, s, index, _ = clustered
+    ids = np.asarray(index.ids_cm)
+    valid = ids[ids >= 0]
+    assert len(valid) == len(s) and len(np.unique(valid)) == len(s)
+    norms = np.linalg.norm(np.asarray(index.centroids), axis=1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+    per_list = (ids >= 0).sum(axis=1)
+    cap = int(np.ceil(1.5 * len(s) / default_n_clusters(len(s))))
+    assert per_list.max() <= max(8, cap)
+    # host mirrors match device arrays
+    np.testing.assert_array_equal(ids, index.ids_h)
+
+
+# ---------------------------------------------------------------------------
+# router-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(GenSpec(name="ivf", models=ROUTERBENCH["RouterBench"],
+                            n_queries=900, seed=11))
+
+
+def test_router_ivf_auc_within_tolerance(ds):
+    """Acceptance: routing AUC with the IVF backend stays within tolerance
+    of the exact backend (same k, default nprobe)."""
+    exact = E.utility_auc(KNNRouter(k=50).fit(ds), ds)["auc"]
+    ivf = E.utility_auc(KNNRouter(k=50, index="ivf").fit(ds), ds)["auc"]
+    assert abs(exact - ivf) < 1.5, (exact, ivf)
+    assert ivf > E.random_auc(ds)["auc"] + 10
+
+
+def test_router_ivf_selection_and_confidence(ds):
+    r = KNNRouter(k=10, index="ivf")
+    r.fit_selection(ds, 0.5 / ds.c_max)
+    X = ds.part("test")[0]
+    choice = r.select(X)
+    assert choice.shape == (len(X),)
+    assert choice.min() >= 0 and choice.max() < ds.n_models
+    kth, agree = r.confidence(X)
+    assert kth.shape == (len(X),) and agree.shape == (len(X),)
+    assert np.all((agree >= 0) & (agree <= 1))
+
+
+def test_router_ivf_softmax_weights_finite(ds):
+    r = KNNRouter(k=20, weights="softmax", index="ivf").fit(ds)
+    s, c = r.predict_utility(ds.part("test")[0])
+    assert np.all(np.isfinite(s)) and np.all(np.isfinite(c))
+
+
+def test_router_rejects_unknown_index():
+    with pytest.raises(ValueError):
+        KNNRouter(index="lsh")
+
+
+def test_knn_service_ivf_backend(ds):
+    """`knn_service(index='ivf')` routes through the IVF retrieval path and
+    reports its backend."""
+    from repro.configs import get_config, reduced
+    from repro.serving import encoder
+    from repro.serving.engine import ServingEngine
+    from repro.serving.router_service import knn_service
+    from repro.core.dataset import RoutingDataset
+
+    names = ["qwen3-4b", "mamba2-370m"]
+    engines = {n: ServingEngine(reduced(get_config(n)), max_slots=2,
+                                cache_len=48, seed=i)
+               for i, n in enumerate(names)}
+    texts = [f"topic {i % 4} example {i}" for i in range(80)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(0)
+    sds = RoutingDataset("svc", emb,
+                         rng.uniform(0.2, 1.0, (80, 2)).astype(np.float32),
+                         rng.uniform(0.001, 0.01, (80, 2)).astype(np.float32),
+                         names)
+    svc = knn_service(sds, engines, k=5, index="ivf", lam=1.0)
+    assert svc.retrieval_backend == "ivf"
+    results = svc.serve_texts(["topic 1 question", "topic 2 question"],
+                              max_new_tokens=3)
+    assert all(r.request.done for r in results)
+    assert all(r.model in engines for r in results)
+    assert all(r.confidence is not None for r in results)

@@ -41,6 +41,137 @@ def test_knn_topk_dtypes(dtype):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("Q,N,k", [
+    (130, 1100, 10),     # Q and N both off the block grid -> padded tiles
+    (1, 64, 5),          # single-query tile
+    (16, 100, 100),      # k == N: every support row must appear
+    (200, 1030, 17),     # N pad region larger than k
+])
+def test_knn_topk_block_boundaries(Q, N, k):
+    """Padded query rows are dropped and padded support rows never leak into
+    the returned indices, even when Q/N are not block multiples."""
+    from repro.kernels.knn_topk.ops import knn_topk
+    from repro.kernels.knn_topk.ref import knn_topk_reference
+    kq, ks = jax.random.split(jax.random.fold_in(KEY, 7 * Q + N))
+    q = jax.random.normal(kq, (Q, 32))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    s = jax.random.normal(ks, (N, 32))
+    rs, ri = knn_topk_reference(q, s, min(k, N))
+    ps, pi = knn_topk(q, s, k, use_pallas=True, interpret=True)
+    assert ps.shape == (Q, min(k, N)) and pi.shape == (Q, min(k, N))
+    np.testing.assert_allclose(np.asarray(ps), np.asarray(rs),
+                               rtol=1e-5, atol=1e-5)
+    pi = np.asarray(pi)
+    assert pi.min() >= 0 and pi.max() < N       # no padded-row indices
+    if k >= N:                                  # k == N: exact row coverage
+        assert all(set(row) == set(range(N)) for row in pi)
+
+
+def test_knn_topk_duplicate_rows_tied_scores():
+    """Duplicated support rows create exact score ties: top-k scores must
+    match the reference and tied indices must all point at copies of the
+    same row."""
+    from repro.kernels.knn_topk.ops import knn_topk
+    from repro.kernels.knn_topk.ref import knn_topk_reference
+    base = jax.random.normal(KEY, (40, 16))
+    s = jnp.concatenate([base, base], axis=0)          # every row duplicated
+    q = jax.random.normal(jax.random.fold_in(KEY, 9), (6, 16))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    rs, _ = knn_topk_reference(q, s, 10)
+    ps, pi = knn_topk(q, s, 10, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(ps), np.asarray(rs),
+                               rtol=1e-5, atol=1e-5)
+    # an index and its duplicate refer to the same underlying row
+    canon = np.asarray(pi) % 40
+    rcanon = np.asarray(knn_topk_reference(q, s, 10)[1]) % 40
+    assert all(set(a) == set(b) for a, b in zip(canon, rcanon))
+
+
+# ---------------------------------------------------------------------------
+# knn_ivf
+# ---------------------------------------------------------------------------
+
+def _clustered_support(key, n, d, n_centers=8, scale=3.0):
+    kc, kn, ka = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_centers, d)) * scale
+    assign = jax.random.randint(ka, (n,), 0, n_centers)
+    return centers, centers[assign] + jax.random.normal(kn, (n, d))
+
+
+@pytest.mark.parametrize("Q,N,D,k,nprobe", [
+    (64, 512, 32, 10, 4),
+    (33, 500, 16, 7, 3),      # Q off the tile grid -> padded query rows
+    (1, 200, 16, 5, 2),       # single query
+    (16, 300, 32, 300, 6),    # k > valid candidates -> -1/-inf tail slots
+])
+def test_ivf_kernel_matches_oracle(Q, N, D, k, nprobe):
+    """The Pallas IVF kernel and both jnp backends must reproduce the
+    per-query probing oracle exactly (same probe sets, same masks)."""
+    from repro.kernels.knn_ivf.ops import build_ivf_index, ivf_topk
+    from repro.kernels.knn_ivf.ref import ivf_topk_reference
+    key = jax.random.fold_in(KEY, Q * N + k)
+    centers, s = _clustered_support(key, N, D)
+    q = centers[jax.random.randint(jax.random.fold_in(key, 1), (Q,), 0, 8)] \
+        + jax.random.normal(jax.random.fold_in(key, 2), (Q, D))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    index = build_ivf_index(s, seed=0)
+    os_, oi = ivf_topk_reference(q, index.centroids, index.sup_cm,
+                                 index.ids_cm, k, nprobe)
+    for backend in ("host", "tiles", "pallas"):
+        bs, bi = ivf_topk(q, index, k, nprobe=nprobe, backend=backend)
+        np.testing.assert_allclose(np.asarray(bs), np.asarray(os_),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"backend={backend}")
+        bi = np.asarray(bi)
+        assert ((bi >= 0) & (bi < N) | (bi == -1)).all(), backend
+        # -1 exactly where the oracle has no candidate
+        np.testing.assert_array_equal(bi == -1, np.asarray(oi) == -1)
+
+
+def test_ivf_kernel_empty_slots_stay_minus_one():
+    """Regression: when a query has fewer valid candidates than k and its
+    LAST probed list is exactly full (no -1 padding rows), the kernel's
+    empty tail slots must still be -1/NEG — masked candidates must not leak
+    their row ids."""
+    from repro.kernels.knn_ivf.kernel import ivf_topk_pallas
+    L, D = 8, 16
+    rng = np.random.default_rng(0)
+    sup_cm = jnp.asarray(rng.normal(size=(2, L, D)).astype(np.float32))
+    ids_cm = jnp.asarray(np.array(
+        [[0, 1, 2] + [-1] * 5,                   # list 0: 3 rows + padding
+         list(range(3, 3 + L))], np.int32))      # list 1: exactly full
+    inv_cm = jnp.where(ids_cm >= 0,
+                       jax.lax.rsqrt(jnp.sum(sup_cm ** 2, -1) + 1e-12), 0.0)
+    q = jnp.asarray(rng.normal(size=(1, D)).astype(np.float32))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    k = 12                                       # > 11 valid candidates
+    scores, idx = ivf_topk_pallas(
+        q, sup_cm, ids_cm, inv_cm,
+        q_probe=jnp.array([[0, 1]], jnp.int32),
+        tile_probe=jnp.array([[0, 1]], jnp.int32),
+        tile_valid=jnp.array([[1, 1]], jnp.int32), k=k)
+    idx = np.asarray(idx)[0]
+    assert set(idx[:11]) == set(range(11))       # all real rows surface once
+    assert (idx[11:] == -1).all()                # no leaked ids in the tail
+
+
+def test_ivf_padded_lists_never_leak():
+    """List padding rows (ids_cm == -1) must never surface as indices even
+    when k spans whole probed lists."""
+    from repro.kernels.knn_ivf.ops import build_ivf_index, ivf_topk
+    key = jax.random.fold_in(KEY, 123)
+    _, s = _clustered_support(key, 257, 16)      # odd N -> ragged lists
+    q = jax.random.normal(jax.random.fold_in(key, 1), (9, 16))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    index = build_ivf_index(s, n_clusters=5, seed=0)
+    for backend in ("host", "tiles", "pallas"):
+        sc, ix = ivf_topk(q, index, index.list_size, nprobe=2,
+                          backend=backend)
+        ix, sc = np.asarray(ix), np.asarray(sc)
+        assert ix.max() < 257
+        assert np.isneginf(sc[ix == -1]).all()
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
