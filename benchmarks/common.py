@@ -9,7 +9,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.routers import make_router
+from repro.core.routers import make_router, parse_spec
 
 RESULTS = Path(os.environ.get("REPRO_RESULTS", "results"))
 RESULTS.mkdir(parents=True, exist_ok=True)
@@ -19,24 +19,29 @@ RESULTS.mkdir(parents=True, exist_ok=True)
 # below full epochs — verified on RouterBench).
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.35"))
 
-_EPOCHS = {
-    "linear_mf": 120, "mlp": 120, "mlp_mf": 120,
-    "graph10": 60, "graph100": 60,
-    "attn10": 40, "attn100": 40, "dattn10": 40, "dattn100": 40,
-}
+# per-family paper-scale epochs for the trainable routers
+_EPOCHS = {"linear_mf": 120, "mlp": 120, "mlp_mf": 120,
+           "graph": 60, "attn": 40, "dattn": 40}
 
 
 def bench_router(name: str):
-    """Router with benchmark-scale training epochs."""
-    if name.startswith("knn") or name == "linear":
-        return make_router(name)          # non-parametric: no epochs knob
-    epochs = max(5, int(_EPOCHS[name] * SCALE))
-    return make_router(name, epochs=epochs)
+    """Router from a spec string, with benchmark-scale training epochs
+    (an explicit ``@epochs=...`` in the spec wins over the scale)."""
+    spec = parse_spec(name)
+    epochs = _EPOCHS.get(spec.family)
+    if epochs is None or "epochs" in spec.kwargs:
+        return make_router(spec)          # non-parametric / explicit epochs
+    return make_router(spec, epochs=max(5, int(epochs * SCALE)))
 
 
-def routers_from_env(default):
+def routers_from_env(default, routers=None):
+    """Router subset: explicit ``routers`` argument wins, then the
+    REPRO_BENCH_ROUTERS env var (comma-separated spec strings), then the
+    table's default."""
+    if routers:
+        return list(routers)
     env = os.environ.get("REPRO_BENCH_ROUTERS")
-    return env.split(",") if env else default
+    return env.split(",") if env else list(default)
 
 
 def write_csv(path: Path, header, rows):

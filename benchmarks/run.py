@@ -2,7 +2,12 @@
 
   PYTHONPATH=src python -m benchmarks.run            # quick suite
   PYTHONPATH=src python -m benchmarks.run --full     # everything
-  REPRO_BENCH_ROUTERS=knn10,knn100,linear ... --only table2
+  REPRO_BENCH_ROUTERS=knn10,knn100-ivf,linear ... --only table2
+
+Router subsets are spec strings (`repro.core.routers.spec` grammar, e.g.
+``knn100-ivf@nprobe=16``) and are passed to each table explicitly — quick
+mode never mutates the environment, so ``--only table2`` after a quick run
+still sees the full default router set.
 
 Prints a ``name,us_per_call,derived`` CSV summary line per benchmark and
 writes per-table CSVs under results/.
@@ -51,17 +56,21 @@ def main() -> None:
     }
     selected = (args.only.split(",") if args.only
                 else (full_suite if args.full else quick_default))
+    # quick mode: the simple-method subset, passed EXPLICITLY to the router
+    # tables (full 12-router sweep via --full; its CSVs ship under results/)
+    quick_routers = None
     if not args.full and not os.environ.get("REPRO_BENCH_ROUTERS"):
-        # quick mode: the simple-method subset (full 12-router sweep via
-        # --full; its CSVs ship under results/)
-        os.environ["REPRO_BENCH_ROUTERS"] = (
-            "knn10,knn100,knn10_ivf,knn100_ivf,linear,linear_mf,mlp,mlp_mf")
+        quick_routers = ["knn10", "knn100", "knn10-ivf", "knn100-ivf",
+                         "linear", "linear_mf", "mlp", "mlp_mf"]
+    router_jobs = {"table2", "table3", "table4", "table5", "tableD", "tableI"}
 
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.time()
+        kw = ({"routers": quick_routers}
+              if quick_routers and name in router_jobs else {})
         try:
-            rows = jobs[name]()
+            rows = jobs[name](**kw)
             dt = time.time() - t0
             n = max(len(rows), 1) if rows is not None else 1
             print(f"{name},{dt / n * 1e6:.0f},rows={n} wall={dt:.1f}s")

@@ -12,9 +12,9 @@ from repro.data.routing_bench import full_suite
 from .common import RESULTS, Timer, bench_router, routers_from_env, write_csv
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, routers=None):
     suite = full_suite()
-    router_names = routers_from_env(PAPER_ORDER)
+    router_names = routers_from_env(PAPER_ORDER, routers)
     cols = list(suite)
     rows = []
     rows.append(["Oracle"] + [round(E.oracle_auc(suite[c])["auc"], 2)

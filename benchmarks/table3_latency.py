@@ -16,9 +16,10 @@ from repro.data.routing_bench import routerbench_tasks
 from .common import RESULTS, bench_router, routers_from_env, write_csv
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, routers=None):
     tasks = routerbench_tasks()
-    router_names = routers_from_env(PAPER_ORDER + ["knn10_ivf", "knn100_ivf"])
+    router_names = routers_from_env(PAPER_ORDER + ["knn10-ivf", "knn100-ivf"],
+                                    routers)
     rows = []
     for rn in router_names:
         per_task = []

@@ -12,10 +12,10 @@ from repro.data.routing_bench import routerbench_tasks
 from .common import RESULTS, bench_router, routers_from_env, write_csv
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, routers=None):
     tasks = routerbench_tasks()
     names = list(tasks)
-    router_names = routers_from_env(PAPER_ORDER)
+    router_names = routers_from_env(PAPER_ORDER, routers)
     rows = []
     for rn in router_names:
         id_aucs, ood_aucs = [], []

@@ -11,10 +11,10 @@ from repro.data.routing_bench import vlm_benchmarks
 from .common import RESULTS, bench_router, routers_from_env, write_csv
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, routers=None):
     suite = vlm_benchmarks()
     cols = list(suite)
-    router_names = routers_from_env(PAPER_ORDER)
+    router_names = routers_from_env(PAPER_ORDER, routers)
     rows = []
     rows.append(["Oracle"] + [round(E.oracle_auc(suite[c])["auc"], 2)
                               for c in cols] + [""])

@@ -10,10 +10,10 @@ from repro.data.routing_bench import routerbench_combined
 from .common import RESULTS, bench_router, routers_from_env, write_csv
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, routers=None):
     ds = routerbench_combined()
     router_names = routers_from_env(
-        ["knn10", "knn100", "linear", "mlp", "graph10", "attn10"])
+        ["knn10", "knn100", "linear", "mlp", "graph10", "attn10"], routers)
     rows = []
     for rn in router_names:
         su = selection_utility(lambda rn=rn: bench_router(rn), ds, seed=seed)

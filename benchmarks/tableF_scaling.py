@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from repro.core.routers.knn import KNNRouter
+from repro.core.routers import make_router
 from repro.core.dataset import RoutingDataset
 
 from .common import RESULTS, write_csv
@@ -29,7 +29,7 @@ def run(seed: int = 0):
         ds = _synth(n)
         mem = (ds.embeddings.nbytes + ds.scores.nbytes + ds.costs.nbytes)
         t0 = time.time()
-        r = KNNRouter(k=10).fit(ds)
+        r = make_router("knn10").fit(ds)
         r.predict_utility(ds.embeddings[:64])       # build+compile
         build = time.time() - t0
         t0 = time.time()

@@ -12,10 +12,10 @@ from repro.data.synthetic import embedding_variant
 from .common import RESULTS, bench_router, routers_from_env, write_csv
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, routers=None):
     tasks = routerbench_tasks()
     router_names = routers_from_env(
-        ["knn10", "knn100", "linear", "mlp", "graph10", "attn10"])
+        ["knn10", "knn100", "linear", "mlp", "graph10", "attn10"], routers)
     rows = []
     for emb_name, transform in [
             ("bert-768", None),

@@ -43,6 +43,18 @@ def main():
     assert err < 1e-4
     print("distributed kNN == single-device kNN (exact retrieval preserved)")
 
+    # the same mesh drives a full spec-addressed router: construction kwargs
+    # that can't live in a spec string (the mesh handle) ride as overrides
+    from repro.core import eval as E
+    from repro.core.routers import make_router
+    from repro.data.prices import ROUTERBENCH
+    from repro.data.synthetic import GenSpec, generate
+    ds = generate(GenSpec(name="mesh-demo", models=ROUTERBENCH["RouterBench"],
+                          n_queries=600, seed=0))
+    router = make_router("knn100", mesh=mesh).fit(ds)
+    print(f"mesh-sharded knn100 AUC = {E.utility_auc(router, ds)['auc']:.2f} "
+          f"(vs random {E.random_auc(ds)['auc']:.2f})")
+
 
 if __name__ == "__main__":
     main()

@@ -1,15 +1,17 @@
-"""Quickstart: generate a routing benchmark, fit the paper's kNN router,
-evaluate the full cost-performance Pareto AUC, run the practitioner
+"""Quickstart: generate a routing benchmark, run the spec-addressable
+RoutingPipeline (fit -> evaluate -> save -> load), run the practitioner
 diagnostics, and train a reduced pool model for a few steps.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import numpy as np
 
 from repro.core import eval as E
 from repro.core.diagnostics import locality_check, twonn_intrinsic_dim
-from repro.core.routers import make_router
 from repro.data.routing_bench import routerbench_combined
+from repro.serving.pipeline import RoutingPipeline
 
 
 def main():
@@ -24,14 +26,23 @@ def main():
     print(f"TwoNN intrinsic dim = {twonn_intrinsic_dim(ds.embeddings):.1f} "
           f"(ambient {ds.dim})")
 
-    # 3) routers: simple beats complex
+    # 3) spec-addressed routers through the pipeline: simple beats complex
     print(f"oracle AUC = {E.oracle_auc(ds)['auc']:.2f}   "
           f"random AUC = {E.random_auc(ds)['auc']:.2f}")
-    for name in ("knn10", "knn100", "linear"):
-        r = make_router(name).fit(ds)
-        print(f"{name:8s} AUC = {E.utility_auc(r, ds)['auc']:.2f}")
+    for spec in ("knn10", "knn100", "linear"):
+        pipe = RoutingPipeline(spec).fit(ds)
+        print(f"{spec:8s} AUC = {pipe.evaluate()['auc']:.2f}")
 
-    # 4) train a reduced pool model for a few steps (full substrate)
+    # 4) persist the fitted router and boot a fresh pipeline from the
+    #    artifact alone — no training data at load time
+    with tempfile.TemporaryDirectory() as td:
+        path = RoutingPipeline("knn100").fit(ds).save(td + "/knn100")
+        reloaded = RoutingPipeline.load(path)
+        print(f"reloaded {reloaded.spec} AUC = "
+              f"{reloaded.evaluate(ds)['auc']:.2f} (bitwise-identical "
+              f"predictions, see tests/test_spec_artifacts.py)")
+
+    # 5) train a reduced pool model for a few steps (full substrate)
     from repro.launch.train import main as train_main
     train_main(["--arch", "h2o-danube-1.8b", "--reduced", "--steps", "5",
                 "--batch", "2", "--seq", "64"])

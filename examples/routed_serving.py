@@ -1,15 +1,20 @@
 """End-to-end routed serving: a pool of three architectures (dense, SSM,
-SWA-dense), the kNN router as the front door, continuous-batching engines,
-per-query confidence diagnostics with fallback.
+SWA-dense), a spec-addressed kNN router as the front door (fitted, persisted
+as an artifact, and re-booted from it), continuous-batching engines,
+per-request lambda, per-query confidence diagnostics with fallback.
 
   PYTHONPATH=src python examples/routed_serving.py
 """
+import tempfile
+
 from repro.launch.serve import main as serve_main
 
 
 def main():
-    serve_main(["--pool", "qwen3-4b", "mamba2-370m", "h2o-danube-1.8b",
-                "--requests", "10", "--max-new", "5", "--lam", "1.0"])
+    with tempfile.TemporaryDirectory() as td:
+        serve_main(["--pool", "qwen3-4b", "mamba2-370m", "h2o-danube-1.8b",
+                    "--requests", "10", "--max-new", "5", "--lam", "1.0",
+                    "--router", "knn10", "--save-artifact", td + "/knn10"])
 
 
 if __name__ == "__main__":

@@ -16,8 +16,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import bench_router  # noqa: E402
 
-ROUTERS = ["knn10", "knn100", "linear", "linear_mf", "mlp", "mlp_mf",
-           "graph10", "attn10", "dattn10"]
+# spec strings (see repro.core.routers.spec): families, k variants, and the
+# IVF retrieval backend are all addressable from one grammar
+ROUTERS = ["knn10", "knn100", "knn100-ivf", "linear", "linear_mf", "mlp",
+           "mlp_mf", "graph10", "attn10", "dattn10"]
 
 
 def main():

@@ -1,0 +1,64 @@
+"""CI gate for artifact backward-compat: fit, save, reload, and smoke-serve
+``knn10`` and ``linear`` end-to-end through the RoutingPipeline.
+
+  PYTHONPATH=src python scripts/router_artifact_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.serving import encoder
+from repro.serving.engine import ServingEngine
+from repro.serving.pipeline import RoutingPipeline
+from repro.serving.router_service import RouterService
+from repro.core.dataset import RoutingDataset
+
+POOL = ["qwen3-4b", "mamba2-370m"]
+SPECS = ["knn10", "linear"]
+
+
+def build_support(n=80, seed=0):
+    texts = [f"topic {i % 4} example {i}" for i in range(n)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(seed)
+    return RoutingDataset(
+        "smoke", emb,
+        rng.uniform(0.2, 1.0, (n, len(POOL))).astype(np.float32),
+        rng.uniform(0.001, 0.01, (n, len(POOL))).astype(np.float32), POOL)
+
+
+def main() -> int:
+    ds = build_support()
+    engines = {n: ServingEngine(reduced(get_config(n)), max_slots=2,
+                                cache_len=48, seed=i)
+               for i, n in enumerate(POOL)}
+    X = ds.part("test")[0]
+    with tempfile.TemporaryDirectory() as td:
+        for spec in SPECS:
+            pipe = RoutingPipeline(spec).fit(ds)
+            s1, c1 = pipe.router.predict_utility(X)
+            path = pipe.save(f"{td}/{spec}")
+            svc = RouterService.from_artifact(path, engines,
+                                              fallback_model=POOL[0])
+            s2, c2 = svc.router.predict_utility(X)
+            if not (np.array_equal(s1, s2) and np.array_equal(c1, c2)):
+                print(f"FAIL {spec}: artifact round-trip is not bitwise")
+                return 1
+            results = svc.serve_texts(["topic 1 question", "topic 3 question"],
+                                      max_new_tokens=2,
+                                      lam=np.array([0.0, 1.0], np.float32))
+            if not all(r.request.done for r in results):
+                print(f"FAIL {spec}: served requests did not complete")
+                return 1
+            print(f"ok {spec}: saved -> reloaded -> served "
+                  f"({[r.model for r in results]})")
+    print("router artifact smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,11 @@
-"""Router registry: all methods of Table 2/5."""
+"""Router registry: all methods of Table 2/5, spec-addressable.
+
+Construction goes through one declarative source of truth: each router
+module self-registers its family via ``@spec.register``, and the registry,
+the paper ordering, and ``make_router`` are derived from that (`spec.py`).
+Fitted routers persist/restore via `artifacts.save_router` /
+`artifacts.load_router`.
+"""
 from .base import Router
 from .knn import KNNRouter
 from .linear import LinearRouter
@@ -7,59 +14,18 @@ from .mlp import MLPRouter
 from .graph import GraphRouter
 from .attentive import AttentiveRouter, DoubleAttentiveRouter
 from .bandit import LinUCBRouter
+from .spec import (RouterSpec, build_registry, format_spec, make_router,
+                   paper_order, parse_spec, spec_of)
+from .artifacts import load_router, save_router
 
-REGISTRY = {
-    "knn10": lambda: KNNRouter(k=10),
-    "knn100": lambda: KNNRouter(k=100),
-    "knn10_ivf": lambda: KNNRouter(k=10, index="ivf"),
-    "knn100_ivf": lambda: KNNRouter(k=100, index="ivf"),
-    "linear": lambda: LinearRouter(),
-    "linear_mf": lambda: LinearMFRouter(),
-    "mlp": lambda: MLPRouter(),
-    "mlp_mf": lambda: MLPMFRouter(),
-    "graph10": lambda: GraphRouter(k=10),
-    "graph100": lambda: GraphRouter(k=100),
-    "attn10": lambda: AttentiveRouter(k=10),
-    "attn100": lambda: AttentiveRouter(k=100),
-    "dattn10": lambda: DoubleAttentiveRouter(k=10),
-    "dattn100": lambda: DoubleAttentiveRouter(k=100),
-    "linucb": lambda: LinUCBRouter(),
-}
+#: canonical spec name -> zero-arg factory, one entry per registered variant
+REGISTRY = build_registry()
 
-PAPER_ORDER = ["knn10", "knn100", "linear", "linear_mf", "mlp", "mlp_mf",
-               "graph10", "graph100", "attn10", "attn100", "dattn10",
-               "dattn100"]
-
-
-def make_router(name: str, **kw) -> Router:
-    return REGISTRY[name]() if not kw else _make_kw(name, **kw)
-
-
-def _make_kw(name, **kw):
-    from . import knn, linear, mf, mlp, graph, attentive
-    classes = {
-        "knn10": (knn.KNNRouter, {"k": 10}), "knn100": (knn.KNNRouter, {"k": 100}),
-        "knn10_ivf": (knn.KNNRouter, {"k": 10, "index": "ivf"}),
-        "knn100_ivf": (knn.KNNRouter, {"k": 100, "index": "ivf"}),
-        "linear": (linear.LinearRouter, {}),
-        "linear_mf": (mf.LinearMFRouter, {}), "mlp": (mlp.MLPRouter, {}),
-        "mlp_mf": (mf.MLPMFRouter, {}),
-        "graph10": (graph.GraphRouter, {"k": 10}),
-        "graph100": (graph.GraphRouter, {"k": 100}),
-        "attn10": (attentive.AttentiveRouter, {"k": 10}),
-        "attn100": (attentive.AttentiveRouter, {"k": 100}),
-        "dattn10": (attentive.DoubleAttentiveRouter, {"k": 10}),
-        "dattn100": (attentive.DoubleAttentiveRouter, {"k": 100}),
-        "linucb": (__import__("repro.core.routers.bandit",
-                              fromlist=["LinUCBRouter"]).LinUCBRouter, {}),
-    }
-    cls, base = classes[name]
-    base = dict(base)
-    base.update(kw)
-    return cls(**base)
-
+#: the paper's Table 2/5 router ordering (derived from registration ranks)
+PAPER_ORDER = paper_order()
 
 __all__ = ["Router", "KNNRouter", "LinearRouter", "LinearMFRouter",
            "MLPMFRouter", "MLPRouter", "GraphRouter", "AttentiveRouter",
            "DoubleAttentiveRouter", "LinUCBRouter", "REGISTRY",
-           "PAPER_ORDER", "make_router"]
+           "PAPER_ORDER", "RouterSpec", "make_router", "parse_spec",
+           "format_spec", "spec_of", "save_router", "load_router"]

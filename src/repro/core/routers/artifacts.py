@@ -1,0 +1,170 @@
+"""Fitted-router artifacts: save/load any registered router without touching
+the training data again.
+
+Layout (one directory per artifact)::
+
+    <path>/manifest.json   spec string, family, constructor config,
+                           embedding dim, model names, fit seed, default lam
+    <path>/state.npz       every fitted tensor, flat keys
+
+State keys are ``<attr>`` for plain arrays/scalars and ``<attr>/<sub>/...``
+for nested param pytrees (list indices encoded as decimal components).  The
+kNN IVF index serializes its cluster-major layout (centroids, padded lists,
+ids, inverse norms) so a server boots straight into approximate retrieval.
+
+``Router.state_dict()`` / ``load_state_dict()`` are driven by each family's
+``state_attrs`` declaration; ``save_router`` / ``load_router`` wrap them with
+the manifest so ``load_router(save_router(r))`` reproduces
+``predict_utility`` bitwise.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from .spec import FAMILIES, router_config, spec_of
+
+FORMAT_VERSION = 1
+_IVF_FIELDS = ("centroids", "sup_cm", "ids_cm", "inv_cm", "n_rows")
+
+
+def _is_ivf(val) -> bool:
+    from repro.kernels.knn_ivf.ops import IVFIndex
+    return isinstance(val, IVFIndex)
+
+
+def _flatten_tree(val, prefix, out):
+    if isinstance(val, dict):
+        for k, v in val.items():
+            _flatten_tree(v, f"{prefix}/{k}", out)
+    elif isinstance(val, (list, tuple)):
+        for i, v in enumerate(val):
+            _flatten_tree(v, f"{prefix}/{i}", out)
+    else:
+        out[prefix] = np.asarray(val)
+
+
+def _unflatten_tree(flat):
+    """Inverse of ``_flatten_tree``: path components that are all digits
+    rebuild lists, everything else dicts; leaves come back as jnp arrays
+    (they feed jitted predict paths)."""
+    tree = {}
+    children = {}
+    for key, val in flat.items():
+        head, _, rest = key.partition("/")
+        if rest:
+            children.setdefault(head, {})[rest] = val
+        else:
+            tree[head] = _node_value(val)
+    for head, sub in children.items():
+        tree[head] = _unflatten_tree(sub)
+    if tree and all(k.isdigit() for k in tree):
+        return [tree[k] for k in sorted(tree, key=int)]
+    return tree
+
+
+def _node_value(arr):
+    return jnp.asarray(arr)
+
+
+def _scalar(arr):
+    kind = arr.dtype.kind
+    if kind == "b":
+        return bool(arr)
+    if kind in "iu":
+        return int(arr)
+    return float(arr)
+
+
+def collect_state(router):
+    """Flat ``{key: np.ndarray}`` of every fitted attribute the router's
+    ``state_attrs`` declares (missing/None attributes are skipped)."""
+    out = {}
+    for attr in router.state_attrs:
+        val = getattr(router, attr, None)
+        if val is None:
+            continue
+        if _is_ivf(val):
+            for f in _IVF_FIELDS:
+                out[f"{attr}/{f}"] = np.asarray(getattr(val, f))
+        elif isinstance(val, (dict, list, tuple)):
+            _flatten_tree(val, attr, out)
+        else:
+            out[attr] = np.asarray(val)
+    return out
+
+
+def restore_state(router, state):
+    """Inverse of ``collect_state``: group keys by attribute, rebuild plain
+    arrays, python scalars, param pytrees, or the IVF index."""
+    groups = {}
+    for key, val in state.items():
+        head, _, rest = key.partition("/")
+        groups.setdefault(head, {})[rest] = val
+    for attr, sub in groups.items():
+        if attr not in router.state_attrs:
+            raise ValueError(f"state entry {attr!r} is not a fitted attribute "
+                             f"of {type(router).__name__}")
+        if list(sub) == [""]:
+            arr = sub[""]
+            setattr(router, attr, _scalar(arr) if arr.ndim == 0 else arr)
+        elif set(sub) == set(_IVF_FIELDS):
+            from repro.kernels.knn_ivf.ops import IVFIndex
+            cent, sup, ids, inv = (np.asarray(sub[f])
+                                   for f in _IVF_FIELDS[:-1])
+            setattr(router, attr, IVFIndex(
+                jnp.asarray(cent), jnp.asarray(sup), jnp.asarray(ids),
+                jnp.asarray(inv), int(sub["n_rows"]), sup, ids, inv))
+        else:
+            setattr(router, attr, _unflatten_tree(sub))
+    return router
+
+
+def save_router(router, path) -> Path:
+    """Persist a fitted router as ``manifest.json`` + ``state.npz`` under
+    ``path`` (created if needed).  Returns ``path``."""
+    if router.model_names is None:
+        raise ValueError("save_router requires a fitted router "
+                         "(call .fit(ds) first)")
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    np.savez(path / "state.npz", **router.state_dict())
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "spec": spec_of(router),
+        "family": router.spec_family,
+        "router_class": type(router).__name__,
+        "config": router_config(router),
+        "embedding_dim": router.embed_dim,
+        "model_names": list(router.model_names),
+        "fit_seed": router.fit_seed,
+        "default_lam": router.default_lam,
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    return path
+
+
+def load_router(path):
+    """Rebuild a fitted router from a ``save_router`` artifact — no training
+    data, no re-fit: construct from the manifest config, restore the state."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    version = manifest.get("format_version")
+    if version != FORMAT_VERSION:
+        raise ValueError(f"unsupported artifact format_version {version!r} "
+                         f"at {path} (this build reads {FORMAT_VERSION})")
+    fam = FAMILIES.get(manifest["family"])
+    if fam is None:
+        raise ValueError(f"artifact family {manifest['family']!r} is not "
+                         f"registered in this build")
+    router = fam.cls(**manifest["config"])
+    with np.load(path / "state.npz") as npz:
+        router.load_state_dict({k: npz[k] for k in npz.files})
+    router.model_names = list(manifest["model_names"])
+    router.embed_dim = manifest["embedding_dim"]
+    router.fit_seed = manifest["fit_seed"]
+    router.default_lam = float(manifest.get("default_lam", 0.0))
+    return router

@@ -17,11 +17,15 @@ import numpy as np
 from repro.kernels.knn_topk.ops import knn_topk
 from ..dataset import RoutingDataset
 from .base import Router, normalize_rows
+from .spec import register
 from . import nn_utils as nn
 
 
+@register("attn", k_param="k", default_ks=(10, 100), paper_rank=6)
 class AttentiveRouter(Router):
     double = False
+    state_attrs = ("_params", "_X", "_Xraw", "_S", "_C", "_c_scale",
+                   "_sel_lam")
 
     def __init__(self, k: int = 10, hidden: int = 64, n_heads: int = 4,
                  d_head: int = 32, epochs: int = 40, lr: float = 2e-3,
@@ -75,6 +79,7 @@ class AttentiveRouter(Router):
         return s, c
 
     def fit(self, ds: RoutingDataset, seed: int = 0):
+        self._record_fit(ds, seed)
         X, S, C = ds.part("train")
         self._X = normalize_rows(X)
         self._Xraw = X.astype(np.float32)
@@ -115,5 +120,6 @@ class AttentiveRouter(Router):
         return np.concatenate(outs_s), np.concatenate(outs_c) * self._c_scale
 
 
+@register("dattn", k_param="k", default_ks=(10, 100), paper_rank=7)
 class DoubleAttentiveRouter(AttentiveRouter):
     double = True

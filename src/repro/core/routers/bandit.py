@@ -14,10 +14,13 @@ import numpy as np
 
 from ..dataset import RoutingDataset
 from .base import Router
+from .spec import register
 
 
+@register("linucb")
 class LinUCBRouter(Router):
     name = "LinUCB"
+    state_attrs = ("_proj", "_A_inv", "_b", "_b_cost", "_c_scale", "_sel_lam")
 
     def __init__(self, alpha: float = 0.5, ridge: float = 1.0,
                  lam: float = 0.0, replay_epochs: int = 1,
@@ -47,6 +50,7 @@ class LinUCBRouter(Router):
         self._b_cost[m] += cost * x
 
     def fit(self, ds: RoutingDataset, seed: int = 0):
+        self._record_fit(ds, seed)
         rng = np.random.default_rng(seed)
         X, S, C = ds.part("train")
         D = min(self.feature_dim, X.shape[1])

@@ -5,10 +5,23 @@
     what traces the full Pareto front, §4.3);
   * model selection — ``fit_selection(ds, lam)`` + ``select(X)``; trained
     against gold labels derived at a fixed lambda.
+
+Plus the deployment contract shared by all families:
+
+  * every fit records ``model_names`` / ``embed_dim`` / ``fit_seed`` via
+    ``_record_fit`` so a serving layer can validate arity without probing;
+  * ``state_dict()`` / ``load_state_dict()`` round-trip every fitted tensor
+    named in the class's ``state_attrs`` (see `artifacts.py` for the on-disk
+    npz + manifest format);
+  * ``default_lam`` is the spec-level routing trade-off (``"knn100@lam=0.5"``)
+    used when a request carries no lambda of its own;
+  * routers MAY expose ``confidence(X) -> (kth_sim, agreement)`` — the §8
+    practitioner diagnostics — as an optional protocol; the serving layer
+    feature-detects it instead of type-checking.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -28,6 +41,26 @@ def gold_labels(scores: np.ndarray, costs: np.ndarray, lam: float) -> np.ndarray
 class Router:
     name = "base"
     is_parametric = True
+    #: fitted attributes serialized by state_dict(); one declaration per family
+    state_attrs: Tuple[str, ...] = ()
+    #: spec-level default routing lambda (``@lam=...``); serving fallback
+    default_lam: float = 0.0
+    _sel_lam: Optional[float] = None
+
+    # fit metadata (recorded by _record_fit; None until fitted)
+    model_names: Optional[List[str]] = None
+    embed_dim: Optional[int] = None
+    fit_seed: Optional[int] = None
+
+    def _record_fit(self, ds: RoutingDataset, seed: int) -> None:
+        self.model_names = list(ds.model_names)
+        self.embed_dim = int(ds.dim)
+        self.fit_seed = int(seed)
+
+    @property
+    def n_models(self) -> Optional[int]:
+        """Output arity, known once fitted (or loaded from an artifact)."""
+        return None if self.model_names is None else len(self.model_names)
 
     # ---- utility formulation ----
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "Router":
@@ -45,5 +78,20 @@ class Router:
         return self.fit(ds, seed=seed)
 
     def select(self, X: np.ndarray) -> np.ndarray:
+        if self._sel_lam is None:
+            raise RuntimeError(
+                f"{type(self).__name__}.select() called before "
+                f"fit_selection(); fit the selection formulation first or "
+                f"route via predict_utility() at an explicit lambda")
         s, c = self.predict_utility(X)
         return np.argmax(s - self._sel_lam * c, axis=1)
+
+    # ---- artifact contract ----
+    def state_dict(self):
+        """Flat {key: np.ndarray} of every fitted tensor (see artifacts.py)."""
+        from .artifacts import collect_state
+        return collect_state(self)
+
+    def load_state_dict(self, state) -> "Router":
+        from .artifacts import restore_state
+        return restore_state(self, state)

@@ -12,10 +12,15 @@ import numpy as np
 from repro.kernels.knn_topk.ops import knn_topk
 from ..dataset import RoutingDataset
 from .base import Router, normalize_rows
+from .spec import register
 from . import nn_utils as nn
 
 
+@register("graph", k_param="k", default_ks=(10, 100), paper_rank=5)
 class GraphRouter(Router):
+    state_attrs = ("_params", "_X", "_Xraw", "_S", "_C", "_c_scale",
+                   "_sel_lam")
+
     def __init__(self, k: int = 10, hidden: int = 64, epochs: int = 60,
                  lr: float = 2e-3, batch_size: int = 128):
         self.k, self.hidden = k, hidden
@@ -64,6 +69,7 @@ class GraphRouter(Router):
         return out[..., 0], out[..., 1]
 
     def fit(self, ds: RoutingDataset, seed: int = 0):
+        self._record_fit(ds, seed)
         X, S, C = ds.part("train")
         self._X = normalize_rows(X)
         self._S = S.astype(np.float32)

@@ -31,10 +31,14 @@ from repro.kernels.knn_ivf.ops import DEFAULT_NPROBE, build_ivf_index, ivf_topk
 from repro.kernels.knn_topk.ops import knn_topk
 from ..dataset import RoutingDataset
 from .base import Router, gold_labels, normalize_rows
+from .spec import register
 
 
+@register("knn", k_param="k", default_ks=(10, 100), supports_ivf=True,
+          paper_rank=0)
 class KNNRouter(Router):
     is_parametric = False
+    state_attrs = ("_X", "_S", "_C", "_ivf", "_train_best", "_sel_lam")
 
     def __init__(self, k: int = 100, weights: str = "uniform",
                  use_pallas: bool = False, temperature: float = 20.0,
@@ -55,6 +59,7 @@ class KNNRouter(Router):
 
     # ---- fit = store the support set (+ IVF coarse quantizer) ----
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
+        self._record_fit(ds, seed)
         X, S, C = ds.part("train")
         self._X = normalize_rows(X)
         self._S = S.astype(np.float32)
@@ -110,6 +115,10 @@ class KNNRouter(Router):
         return self
 
     def select(self, X: np.ndarray) -> np.ndarray:
+        if getattr(self, "_train_best", None) is None:
+            raise RuntimeError("KNNRouter.select() called before "
+                               "fit_selection(); the neighbour vote needs the "
+                               "training labels derived at a fixed lambda")
         _, idx = self._neighbors(X)
         valid = idx >= 0
         votes = self._train_best[np.maximum(idx, 0)]   # (Q, k)

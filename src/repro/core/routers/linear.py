@@ -12,6 +12,7 @@ import numpy as np
 
 from ..dataset import RoutingDataset
 from .base import Router, gold_labels
+from .spec import register
 from . import nn_utils as nn
 
 
@@ -23,13 +24,16 @@ def _ridge(X, Y, reg=1e-2):
     return np.linalg.solve(A, B).astype(np.float32)
 
 
+@register("linear", paper_rank=1)
 class LinearRouter(Router):
     name = "Linear"
+    state_attrs = ("_Ws", "_Wc", "_sel_params", "_sel_lam")
 
     def __init__(self, reg: float = 1e-2):
         self.reg = reg
 
     def fit(self, ds: RoutingDataset, seed: int = 0):
+        self._record_fit(ds, seed)
         X, S, C = ds.part("train")
         self._Ws = _ridge(X, S, self.reg)
         self._Wc = _ridge(X, C, self.reg)
@@ -41,6 +45,8 @@ class LinearRouter(Router):
 
     # ---- selection: multinomial logistic regression ----
     def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
+        self._record_fit(ds, seed)
+        self._sel_lam = lam
         X, S, C = ds.part("train")
         y = gold_labels(S, C, lam)
         M = ds.n_models

@@ -9,11 +9,14 @@ import numpy as np
 
 from ..dataset import RoutingDataset
 from .base import Router, gold_labels
+from .spec import register
 from . import nn_utils as nn
 
 
+@register("linear_mf", paper_rank=2)
 class LinearMFRouter(Router):
     name = "Linear (MF)"
+    state_attrs = ("_params", "_c_scale", "_sel_lam")
 
     def __init__(self, d_m: int = 128, epochs: int = 120, lr: float = 2e-3):
         self.d_m, self.epochs, self.lr = d_m, epochs, lr
@@ -34,6 +37,7 @@ class LinearMFRouter(Router):
         return s, c
 
     def fit(self, ds: RoutingDataset, seed: int = 0):
+        self._record_fit(ds, seed)
         X, S, C = ds.part("train")
         key = jax.random.PRNGKey(seed)
         params = self._init(key, ds.dim, ds.n_models)
@@ -56,6 +60,7 @@ class LinearMFRouter(Router):
         return np.asarray(s), np.asarray(c) * self._c_scale
 
 
+@register("mlp_mf", paper_rank=4)
 class MLPMFRouter(LinearMFRouter):
     name = "MLP (MF)"
 

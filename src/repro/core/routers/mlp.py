@@ -9,16 +9,20 @@ import numpy as np
 
 from ..dataset import RoutingDataset
 from .base import Router, gold_labels
+from .spec import register
 from . import nn_utils as nn
 
 
+@register("mlp", paper_rank=3)
 class MLPRouter(Router):
     name = "MLP"
+    state_attrs = ("_params", "_c_scale", "_sel_params", "_sel_lam")
 
     def __init__(self, hidden: int = 100, epochs: int = 120, lr: float = 2e-3):
         self.hidden, self.epochs, self.lr = hidden, epochs, lr
 
     def fit(self, ds: RoutingDataset, seed: int = 0):
+        self._record_fit(ds, seed)
         X, S, C = ds.part("train")
         M = ds.n_models
         key = jax.random.PRNGKey(seed)
@@ -47,6 +51,8 @@ class MLPRouter(Router):
 
     # ---- selection ----
     def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
+        self._record_fit(ds, seed)
+        self._sel_lam = lam
         X, S, C = ds.part("train")
         y = gold_labels(S, C, lam)
         key = jax.random.PRNGKey(seed)

@@ -1,0 +1,239 @@
+"""Spec-addressable router construction: one declarative source of truth.
+
+Every router module self-registers its family with the ``@register`` class
+decorator; everything else — the name registry, the paper's table ordering,
+``make_router`` — is derived from those registrations instead of hand-kept
+construction tables.
+
+Spec-string grammar (RouteLLM-style addressable routers)::
+
+    <family><k?>[-ivf][@key=val,...]
+
+    knn100              kNN router, k=100, exact retrieval
+    knn100-ivf          same, inverted-file approximate retrieval
+    knn100-ivf@lam=0.5  ... with a default routing lambda of 0.5
+    mlp@epochs=40       MLP router with a constructor override
+    graph10@lr=1e-3     constructor kwargs are typed (int/float/bool/str)
+
+``lam`` is a reserved key: it sets the router's *default* cost/quality
+trade-off used by the serving layer when a request does not carry its own
+lambda (see `repro.serving.router_service.RouterService`).  Families whose
+constructor also takes ``lam`` (LinUCB) receive it in both places.
+
+``parse_spec`` / ``format_spec`` round-trip; legacy underscore names
+(``knn10_ivf``) are accepted as aliases of the canonical dashed form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import re
+from functools import partial
+from typing import Dict, Mapping, Optional, Tuple
+
+#: reserved spec keys handled by the spec layer itself (not the constructor)
+RESERVED_KEYS = ("lam",)
+
+_SPEC_RE = re.compile(r"^(?P<family>[a-z][a-z0-9_]*?)(?P<k>\d+)?(?P<ivf>-ivf)?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterSpec:
+    """Parsed form of a spec string."""
+    family: str
+    k: Optional[int] = None
+    ivf: bool = False
+    kwargs: Mapping[str, object] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterFamily:
+    """One registered router family (declared via ``@register``)."""
+    family: str
+    cls: type
+    k_param: Optional[str]          # constructor kwarg that receives <k>
+    default_ks: Tuple[int, ...]     # registry-enumerated k variants
+    supports_ivf: bool
+    paper_rank: Optional[int]       # position in the paper's tables; None = extra
+    ctor_params: frozenset
+
+    def variant_names(self):
+        ks = self.default_ks or (None,)
+        for k in ks:
+            yield format_spec(RouterSpec(self.family, k=k))
+            if self.supports_ivf:
+                yield format_spec(RouterSpec(self.family, k=k, ivf=True))
+
+
+FAMILIES: Dict[str, RouterFamily] = {}
+
+
+def register(family: str, *, k_param: Optional[str] = None,
+             default_ks: Tuple[int, ...] = (), supports_ivf: bool = False,
+             paper_rank: Optional[int] = None):
+    """Class decorator: declare ``cls`` as the implementation of ``family``."""
+    def deco(cls):
+        params = inspect.signature(cls.__init__).parameters
+        ctor = frozenset(p for p in params if p not in ("self",))
+        if family in FAMILIES:
+            raise ValueError(f"router family {family!r} registered twice")
+        FAMILIES[family] = RouterFamily(family, cls, k_param,
+                                        tuple(default_ks), supports_ivf,
+                                        paper_rank, ctor)
+        cls.spec_family = family
+        return cls
+    return deco
+
+
+def _parse_value(raw: str):
+    """Typed kwarg values: int -> float -> bool -> str."""
+    if re.fullmatch(r"[+-]?\d+", raw):
+        return int(raw)
+    try:
+        return float(raw)
+    except ValueError:
+        pass
+    if raw.lower() in ("true", "false"):
+        return raw.lower() == "true"
+    return raw
+
+
+def _format_value(v) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    return str(v)
+
+
+def parse_spec(spec: str) -> RouterSpec:
+    """``"knn100-ivf@lam=0.5"`` -> RouterSpec.  Raises ValueError on unknown
+    families, unsupported k/-ivf suffixes, or malformed/unknown kwargs."""
+    if not isinstance(spec, str) or not spec.strip():
+        raise ValueError(f"empty router spec: {spec!r}")
+    base, sep, kwstr = spec.strip().partition("@")
+    if base.endswith("_ivf"):                      # legacy alias knn10_ivf
+        base = base[:-4] + "-ivf"
+    m = _SPEC_RE.fullmatch(base)
+    if not m:
+        raise ValueError(f"unparseable router spec {spec!r} "
+                         f"(grammar: <family><k?>[-ivf][@key=val,...])")
+    family = m.group("family")
+    fam = FAMILIES.get(family)
+    if fam is None:
+        raise ValueError(f"unknown router family {family!r} in spec {spec!r}; "
+                         f"registered: {', '.join(sorted(FAMILIES))}")
+    k = int(m.group("k")) if m.group("k") else None
+    if k is not None and fam.k_param is None:
+        raise ValueError(f"family {family!r} takes no <k> suffix "
+                         f"(spec {spec!r})")
+    ivf = m.group("ivf") is not None
+    if ivf and not fam.supports_ivf:
+        raise ValueError(f"family {family!r} has no IVF backend (spec {spec!r})")
+
+    kwargs = {}
+    if sep:
+        if not kwstr:
+            raise ValueError(f"dangling '@' in router spec {spec!r}")
+        for item in kwstr.split(","):
+            key, eq, raw = item.partition("=")
+            if not eq or not key or not raw:
+                raise ValueError(f"malformed kwarg {item!r} in spec {spec!r} "
+                                 f"(expected key=val)")
+            if key not in fam.ctor_params and key not in RESERVED_KEYS:
+                raise ValueError(
+                    f"unknown kwarg {key!r} for family {family!r} "
+                    f"(spec {spec!r}); constructor takes: "
+                    f"{', '.join(sorted(fam.ctor_params))}")
+            kwargs[key] = _parse_value(raw)
+    return RouterSpec(family, k=k, ivf=ivf, kwargs=kwargs)
+
+
+def format_spec(spec: RouterSpec) -> str:
+    """Canonical spec string (round-trips through ``parse_spec``)."""
+    s = spec.family
+    if spec.k is not None:
+        s += str(spec.k)
+    if spec.ivf:
+        s += "-ivf"
+    if spec.kwargs:
+        s += "@" + ",".join(f"{k}={_format_value(v)}"
+                            for k, v in sorted(spec.kwargs.items()))
+    return s
+
+
+def make_router(spec, **overrides):
+    """Construct a router from a spec string, a RouterSpec, or a registry
+    name.  ``overrides`` are constructor kwargs applied on top of the spec's
+    (e.g. ``make_router("mlp", epochs=5)``, ``make_router("knn100", mesh=m)``).
+    """
+    if isinstance(spec, str):
+        spec = parse_spec(spec)
+    fam = FAMILIES.get(spec.family)
+    if fam is None:
+        raise ValueError(f"unknown router family {spec.family!r}")
+    kw = {}
+    if spec.k is not None:
+        kw[fam.k_param] = spec.k
+    if spec.ivf:
+        kw["index"] = "ivf"
+    kw.update(spec.kwargs)
+    kw.update(overrides)
+    lam = kw.get("lam", None)
+    if "lam" in kw and "lam" not in fam.ctor_params:
+        kw.pop("lam")
+    unknown = sorted(set(kw) - fam.ctor_params)
+    if unknown:
+        raise ValueError(f"unknown constructor kwargs {unknown} for family "
+                         f"{spec.family!r}; takes: "
+                         f"{', '.join(sorted(fam.ctor_params))}")
+    router = fam.cls(**kw)
+    if lam is not None:
+        router.default_lam = float(lam)
+    return router
+
+
+def spec_of(router) -> str:
+    """Canonical spec string of a router instance (family + k + backend;
+    non-default constructor kwargs live in the artifact manifest config)."""
+    family = getattr(router, "spec_family", None)
+    if family is None:
+        raise ValueError(f"{type(router).__name__} is not a registered "
+                         f"router family (missing @register)")
+    fam = FAMILIES[family]
+    k = getattr(router, fam.k_param) if fam.k_param else None
+    ivf = getattr(router, "index", None) == "ivf"
+    return format_spec(RouterSpec(family, k=k, ivf=ivf))
+
+
+def router_config(router) -> Dict[str, object]:
+    """Constructor kwargs reconstructing this instance (JSON-serializable;
+    the non-serializable ``mesh`` handle is omitted — reattach after load)."""
+    family = getattr(router, "spec_family", None)
+    if family is None:
+        raise ValueError(f"{type(router).__name__} is not a registered "
+                         f"router family (missing @register)")
+    cfg = {}
+    for p in sorted(FAMILIES[family].ctor_params):
+        if p == "mesh" or not hasattr(router, p):
+            continue
+        cfg[p] = getattr(router, p)
+    return cfg
+
+
+def build_registry() -> Dict[str, object]:
+    """name -> zero-arg factory, enumerated from the registered families."""
+    reg = {}
+    for fam in FAMILIES.values():
+        for name in fam.variant_names():
+            reg[name] = partial(make_router, name)
+    return reg
+
+
+def paper_order():
+    """The paper's Table 2/5 router ordering, derived from registration."""
+    names = []
+    for fam in sorted((f for f in FAMILIES.values()
+                       if f.paper_rank is not None),
+                      key=lambda f: f.paper_rank):
+        for k in (fam.default_ks or (None,)):
+            names.append(format_spec(RouterSpec(fam.family, k=k)))
+    return names

@@ -1,9 +1,14 @@
-"""Routed-serving driver: build a pool of reduced-config engines, fit the
-paper's kNN router on a synthetic routing benchmark projected into the query
-encoder's embedding space, then serve a stream of text requests.
+"""Routed-serving driver: build a pool of reduced-config engines, fit a
+spec-addressed router on a synthetic routing benchmark projected into the
+query encoder's embedding space, then serve a stream of text requests at a
+per-request cost/quality lambda.
 
   PYTHONPATH=src python -m repro.launch.serve --pool qwen3-4b mamba2-370m \
-      h2o-danube-1.8b --requests 12
+      h2o-danube-1.8b --requests 12 --router knn10 --save-artifact /tmp/r
+
+With ``--save-artifact`` the fitted router is persisted (npz + manifest) and
+the service is re-booted from the artifact before serving — the deployment
+path where the server never sees the training data.
 """
 from __future__ import annotations
 
@@ -13,9 +18,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.dataset import RoutingDataset
-from repro.core.routers.knn import KNNRouter
 from repro.serving import encoder
 from repro.serving.engine import ServingEngine
+from repro.serving.pipeline import RoutingPipeline
 from repro.serving.router_service import RouterService
 
 TOPICS = ["python programming", "world history", "algebra proofs",
@@ -45,6 +50,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--router", default="knn10",
+                    help="router spec string, e.g. knn10, knn100-ivf@lam=0.5")
+    ap.add_argument("--save-artifact", default=None,
+                    help="persist the fitted router here and re-boot the "
+                         "service from the artifact before serving")
     args = ap.parse_args(argv)
 
     engines = {}
@@ -54,16 +64,26 @@ def main(argv=None):
         print(f"[pool] {name}: reduced {cfg.total_blocks()} blocks")
 
     ds = build_support(args.pool)
-    router = KNNRouter(k=10).fit(ds)
-    svc = RouterService(router, engines, lam=args.lam,
-                        fallback_model=args.pool[0])
+    pipe = RoutingPipeline(args.router).fit(ds)
+    if args.save_artifact:
+        path = pipe.save(args.save_artifact)
+        print(f"[artifact] saved {pipe.spec} -> {path}")
+        svc = RouterService.from_artifact(path, engines,
+                                          fallback_model=args.pool[0])
+    else:
+        svc = pipe.serve(engines, fallback_model=args.pool[0])
 
     reqs = [f"{TOPICS[i % len(TOPICS)]} request number {i}"
             for i in range(args.requests)]
-    results = svc.serve_texts(reqs, max_new_tokens=args.max_new)
+    # per-request lambda: even requests at the CLI trade-off, odd requests
+    # quality-first (lam=0) — one batch, two operating points
+    lams = np.where(np.arange(len(reqs)) % 2 == 0, args.lam, 0.0)
+    results = svc.serve_texts(reqs, max_new_tokens=args.max_new,
+                              lam=lams.astype(np.float32))
     for r in results:
         print(f"  req {r.uid} -> {r.model:24s} s_hat={r.predicted_score:.2f} "
-              f"conf={r.confidence:.2f} tokens={r.request.output_tokens}")
+              f"lam={r.lam:.2f} conf={r.confidence:.2f} "
+              f"tokens={r.request.output_tokens}")
     counts = {}
     for r in results:
         counts[r.model] = counts.get(r.model, 0) + 1

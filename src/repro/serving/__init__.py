@@ -1,1 +1,1 @@
-from . import encoder, engine, router_service, scheduler  # noqa: F401
+from . import encoder, engine, pipeline, router_service, scheduler  # noqa: F401

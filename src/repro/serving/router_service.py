@@ -2,27 +2,38 @@
 serving deployment.
 
   request text -> embed (encoder.py) -> router.predict_utility ->
-  argmax_m  s_hat - lambda * c_hat  -> dispatch to that model's engine.
+  argmax_m  s_hat - lambda_r * c_hat  -> dispatch to that model's engine.
 
-Also surfaces the §8 practitioner diagnostics per query (kth-neighbour
-distance percentile + neighbourhood agreement) so callers can apply fallback
-policies on out-of-coverage queries.
+Routers are addressable three ways (see `repro.core.routers.spec`):
 
-``knn_service`` builds the whole stack around a kNN router on either
-retrieval backend: ``index="exact"`` (brute-force Pallas scan) or
-``index="ivf"`` (inverted-file approximate retrieval — the deployment-scale
-path once the support set outgrows an O(N) per-query scan).
+  * a fitted ``Router`` instance;
+  * a spec string (``"knn100-ivf@lam=0.5"``) plus a dataset to fit on;
+  * a saved artifact via ``RouterService.from_artifact(path, engines)`` —
+    boots without ever touching the training data.
+
+The cost/quality trade-off ``lambda`` is **per request**: every routing call
+takes an optional scalar or per-request vector, falling back to the
+service default and then the router's spec-level ``default_lam``
+(RouteLLM-style ``router-<spec>-<threshold>`` addressing).  All entry points
+share one jitted batched utility kernel (`_route_batch`).
+
+Confidence-based fallback uses an optional protocol — any router exposing
+``confidence(X) -> (kth_sim, agreement)`` (§8 diagnostics) participates; no
+type checks.  Router/engine model-count mismatches raise at construction
+instead of silently aliasing choices onto the engine list.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataset import RoutingDataset
-from repro.core.routers.base import Router
-from repro.core.routers.knn import KNNRouter
+from repro.core.routers import (Router, RouterSpec, load_router, make_router,
+                                spec_of)
 from . import encoder
 from .engine import Request, ServingEngine
 
@@ -34,30 +45,82 @@ class RoutedResult:
     request: Request
     predicted_score: float
     predicted_cost: float
+    lam: float = 0.0
     confidence: Optional[float] = None
+
+
+@jax.jit
+def _route_batch(s_hat, c_hat, lam):
+    """Single batched utility path: per-request lambda, argmax over models."""
+    util = s_hat - lam[:, None] * c_hat
+    return jnp.argmax(util, axis=1), util
 
 
 def knn_service(ds: RoutingDataset, engines: Dict[str, "ServingEngine"],
                 k: int = 100, index: str = "exact", lam: float = 0.0,
-                seed: int = 0, **router_kw) -> "RouterService":
-    """Fit a KNNRouter on ``ds`` (building the IVF coarse quantizer when
-    ``index='ivf'``) and wrap it in a RouterService over ``engines``."""
-    router = KNNRouter(k=k, index=index, **router_kw).fit(ds, seed=seed)
-    return RouterService(router, engines, lam=lam)
+                seed: int = 0, fallback_model: Optional[str] = None,
+                confidence_floor: float = 0.02,
+                **router_kw) -> "RouterService":
+    """Fit a kNN router on ``ds`` (building the IVF coarse quantizer when
+    ``index='ivf'``) and wrap it in a RouterService over ``engines``.
+    ``router_kw`` are KNNRouter constructor kwargs (weights, nprobe, ...)."""
+    spec = RouterSpec("knn", k=k, ivf=(index == "ivf"), kwargs=router_kw)
+    return RouterService(spec, engines, ds=ds, lam=lam, seed=seed,
+                         fallback_model=fallback_model,
+                         confidence_floor=confidence_floor)
 
 
 class RouterService:
-    def __init__(self, router: Router, engines: Dict[str, ServingEngine],
-                 lam: float = 0.0, fallback_model: Optional[str] = None,
-                 confidence_floor: float = 0.02):
+    def __init__(self, router: Union[Router, RouterSpec, str],
+                 engines: Dict[str, ServingEngine], *,
+                 ds: Optional[RoutingDataset] = None,
+                 lam: Optional[float] = None,
+                 fallback_model: Optional[str] = None,
+                 confidence_floor: float = 0.02, seed: int = 0):
+        if isinstance(router, (str, RouterSpec)):
+            router = make_router(router)
+        if router.model_names is None and ds is None:
+            raise ValueError(
+                "router is not fitted; pass ds= to fit it here, or load "
+                "a fitted artifact via RouterService.from_artifact()")
+        if ds is not None:        # an explicit dataset always (re)fits, so a
+            router.fit(ds, seed=seed)  # fitted router can't shadow fresh data
+
         self.router = router
         self.engines = engines
-        self.model_names = list(engines)
-        self.lam = lam
+        self.model_names = self._validate_engines(router, engines)
+        self.default_lam = router.default_lam if lam is None else float(lam)
         self.fallback_model = fallback_model
         self.confidence_floor = confidence_floor
         self._uid = 0
         self.log: List[RoutedResult] = []
+
+    @classmethod
+    def from_artifact(cls, path, engines: Dict[str, ServingEngine],
+                      **kw) -> "RouterService":
+        """Boot a service from a `save_router` artifact — no training data."""
+        return cls(load_router(path), engines, **kw)
+
+    @staticmethod
+    def _validate_engines(router: Router, engines: Dict) -> List[str]:
+        """Router output arity and names must match the engine pool exactly —
+        a mismatch would silently mis-route every request."""
+        names = list(router.model_names)
+        if len(names) != len(engines):
+            raise ValueError(
+                f"router predicts over {len(names)} models {names} but "
+                f"{len(engines)} engines were supplied ({list(engines)})")
+        missing = [m for m in names if m not in engines]
+        if missing:
+            raise ValueError(
+                f"router models {missing} have no serving engine "
+                f"(engines: {list(engines)})")
+        return names
+
+    @property
+    def spec(self) -> str:
+        """Canonical spec string of the underlying router."""
+        return spec_of(self.router)
 
     @property
     def retrieval_backend(self) -> str:
@@ -65,25 +128,47 @@ class RouterService:
         return getattr(self.router, "index", "n/a")
 
     # ---- routing ----
-    def route_embeddings(self, emb: np.ndarray) -> np.ndarray:
+    def _resolve_lam(self, lam, n: int) -> np.ndarray:
+        """None -> service default; scalar -> broadcast; (n,) vector as-is."""
+        if lam is None:
+            lam = self.default_lam
+        arr = np.asarray(lam, np.float32)
+        if arr.ndim == 0:
+            return np.full((n,), float(arr), np.float32)
+        if arr.shape != (n,):
+            raise ValueError(f"lam must be a scalar or shape ({n},), got "
+                             f"shape {arr.shape}")
+        return arr
+
+    def _decide(self, emb: np.ndarray, lam) -> tuple:
         s_hat, c_hat = self.router.predict_utility(emb)
-        return np.argmax(s_hat - self.lam * c_hat, axis=1)
+        if s_hat.shape[1] != len(self.model_names):
+            raise ValueError(
+                f"router emitted {s_hat.shape[1]} model columns, expected "
+                f"{len(self.model_names)} ({self.model_names})")
+        lam_r = self._resolve_lam(lam, len(emb))
+        choice, _ = _route_batch(jnp.asarray(s_hat), jnp.asarray(c_hat),
+                                 jnp.asarray(lam_r))
+        return np.asarray(choice), s_hat, c_hat, lam_r
+
+    def route_embeddings(self, emb: np.ndarray, lam=None) -> np.ndarray:
+        """Per-request lambda routing over raw embeddings -> model indices."""
+        return self._decide(emb, lam)[0]
 
     def submit_texts(self, texts: Sequence[str], prompts_tokens=None,
-                     max_new_tokens: int = 8) -> List[RoutedResult]:
+                     max_new_tokens: int = 8, lam=None) -> List[RoutedResult]:
         emb = encoder.embed_texts(list(texts))
-        s_hat, c_hat = self.router.predict_utility(emb)
-        util = s_hat - self.lam * c_hat
-        choice = np.argmax(util, axis=1)
+        choice, s_hat, c_hat, lam_r = self._decide(emb, lam)
 
         conf = None
-        if isinstance(self.router, KNNRouter):
-            kth, agree = self.router.confidence(emb)
+        conf_fn = getattr(self.router, "confidence", None)
+        if callable(conf_fn):
+            _, agree = conf_fn(emb)
             conf = agree
 
         results = []
         for i, text in enumerate(texts):
-            m = self.model_names[choice[i] % len(self.model_names)]
+            m = self.model_names[int(choice[i])]
             if (conf is not None and self.fallback_model
                     and conf[i] < self.confidence_floor):
                 m = self.fallback_model
@@ -98,6 +183,7 @@ class RouterService:
                 uid=req.uid, model=m, request=req,
                 predicted_score=float(s_hat[i, choice[i]]),
                 predicted_cost=float(c_hat[i, choice[i]]),
+                lam=float(lam_r[i]),
                 confidence=float(conf[i]) if conf is not None else None)
             results.append(res)
         return results

@@ -88,6 +88,69 @@ def test_router_service_end_to_end(service):
     assert all(r.confidence is not None for r in results)
 
 
+def _routing_ds(names, n=60, seed=0):
+    """Tiny routing dataset whose model axis matches ``names``."""
+    texts = [f"topic {i % 3} example {i}" for i in range(n)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(seed)
+    return RoutingDataset(
+        "mini", emb, rng.uniform(0.2, 1.0, (n, len(names))).astype(np.float32),
+        rng.uniform(0.001, 0.01, (n, len(names))).astype(np.float32),
+        list(names))
+
+
+def test_model_count_mismatch_raises():
+    """A router fitted over M models must not be silently aliased onto a
+    different-sized engine pool (the old ``choice % len(engines)`` bug)."""
+    ds = _routing_ds(["a", "b", "c"])
+    router = KNNRouter(k=3).fit(ds)
+    with pytest.raises(ValueError, match="3 models"):
+        RouterService(router, {"a": None, "b": None})
+    with pytest.raises(ValueError, match="no serving engine"):
+        RouterService(router, {"a": None, "b": None, "x": None})
+
+
+def test_spec_string_service_requires_dataset():
+    with pytest.raises(ValueError, match="not fitted"):
+        RouterService("knn10", {"a": None, "b": None})
+
+
+def test_per_request_lambda_routes_differently():
+    """One batch, two operating points: lam=0 routes quality-first, a huge
+    lam routes cost-first — the decision must differ per request."""
+    names = ["cheap-weak", "pricey-strong"]
+    ds = _routing_ds(names)
+    # make the trade-off unambiguous: model 1 always better, always pricier
+    ds.scores[:, 0], ds.scores[:, 1] = 0.2, 0.9
+    ds.costs[:, 0], ds.costs[:, 1] = 0.001, 0.01
+    svc = RouterService("knn5", {names[0]: None, names[1]: None}, ds=ds)
+    emb = ds.embeddings[:4]
+    quality_first = svc.route_embeddings(emb, lam=0.0)
+    cost_first = svc.route_embeddings(emb, lam=1e4)
+    assert quality_first.tolist() == [1, 1, 1, 1]
+    assert cost_first.tolist() == [0, 0, 0, 0]
+    mixed = svc.route_embeddings(emb, lam=np.array([0.0, 1e4, 0.0, 1e4]))
+    assert mixed.tolist() == [1, 0, 1, 0]
+    with pytest.raises(ValueError, match="scalar or shape"):
+        svc.route_embeddings(emb, lam=np.zeros(3))
+
+
+def test_service_from_artifact_roundtrip(tmp_path):
+    from repro.serving.pipeline import RoutingPipeline
+    names = ["a", "b"]
+    ds = _routing_ds(names)
+    pipe = RoutingPipeline("knn5@lam=2.0").fit(ds)
+    path = pipe.save(tmp_path / "knn5")
+    svc = RouterService.from_artifact(path, {"a": None, "b": None})
+    assert svc.spec == "knn5"
+    assert svc.default_lam == 2.0                  # spec lam survives the disk
+    emb = ds.embeddings[:6]
+    np.testing.assert_array_equal(
+        svc.route_embeddings(emb),
+        RouterService(pipe.router, {"a": None, "b": None},
+                      lam=2.0).route_embeddings(emb))
+
+
 def test_scheduler_drains():
     cfg = reduced(get_config("qwen3-4b"))
     engines = {"a": ServingEngine(cfg, max_slots=2, cache_len=32, seed=0),

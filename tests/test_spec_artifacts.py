@@ -1,0 +1,155 @@
+"""Spec-addressable router API: spec-string grammar round-trips, registry
+integrity, and save->load artifact parity for every registered family."""
+import numpy as np
+import pytest
+
+from repro.core.routers import (PAPER_ORDER, REGISTRY, RouterSpec,
+                                format_spec, load_router, make_router,
+                                parse_spec, save_router, spec_of)
+from repro.data.prices import ROUTERBENCH
+from repro.data.synthetic import GenSpec, generate
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(GenSpec(name="spec-ds", models=ROUTERBENCH["RouterBench"],
+                            n_queries=260, seed=9))
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_str,expect", [
+    ("knn100", RouterSpec("knn", k=100)),
+    ("knn10-ivf", RouterSpec("knn", k=10, ivf=True)),
+    ("knn100-ivf@lam=0.5", RouterSpec("knn", 100, True, {"lam": 0.5})),
+    ("linear_mf", RouterSpec("linear_mf")),
+    ("mlp@epochs=5,lr=0.001", RouterSpec("mlp",
+                                         kwargs={"epochs": 5, "lr": 0.001})),
+    ("knn10@weights=softmax", RouterSpec("knn", 10,
+                                         kwargs={"weights": "softmax"})),
+    ("knn10@use_pallas=true", RouterSpec("knn", 10,
+                                         kwargs={"use_pallas": True})),
+    ("linucb@alpha=0.25", RouterSpec("linucb", kwargs={"alpha": 0.25})),
+])
+def test_parse_format_round_trip(spec_str, expect):
+    spec = parse_spec(spec_str)
+    assert spec == expect
+    assert parse_spec(format_spec(spec)) == spec          # round-trip
+    assert format_spec(parse_spec(format_spec(spec))) == format_spec(spec)
+
+
+def test_legacy_underscore_ivf_alias():
+    assert parse_spec("knn10_ivf") == RouterSpec("knn", k=10, ivf=True)
+    assert format_spec(parse_spec("knn100_ivf")) == "knn100-ivf"
+
+
+@pytest.mark.parametrize("bad", [
+    "", "bogus", "bogus10", "linear-ivf", "mlp7", "knn10@", "knn10@k",
+    "knn10@nope=1", "knn10@k=", "10knn",
+])
+def test_invalid_specs_raise(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+def test_make_router_rejects_unknown_overrides():
+    with pytest.raises(ValueError):
+        make_router("linear", epochs=5)    # LinearRouter has no epochs knob
+
+
+def test_registry_and_paper_order_derived():
+    assert PAPER_ORDER == ["knn10", "knn100", "linear", "linear_mf", "mlp",
+                           "mlp_mf", "graph10", "graph100", "attn10",
+                           "attn100", "dattn10", "dattn100"]
+    for name in PAPER_ORDER + ["knn10-ivf", "knn100-ivf", "linucb"]:
+        assert name in REGISTRY
+        assert callable(REGISTRY[name])
+    # every registry name parses back to itself (canonical forms only)
+    for name in REGISTRY:
+        assert format_spec(parse_spec(name)) == name
+
+
+def test_spec_constructs_working_router(ds):
+    r = make_router(parse_spec("knn100-ivf@lam=0.5"))
+    assert r.k == 100 and r.index == "ivf"
+    assert r.default_lam == 0.5
+    r.fit(ds)
+    s, c = r.predict_utility(ds.part("test")[0])
+    assert s.shape == c.shape == (len(ds.test_idx), ds.n_models)
+    assert spec_of(r) == "knn100-ivf"
+
+
+def test_select_before_fit_selection_is_descriptive(ds):
+    r = make_router("linear_mf").fit(ds)
+    with pytest.raises(RuntimeError, match="fit_selection"):
+        r.select(ds.part("test")[0][:4])
+    r_knn = make_router("knn10").fit(ds)
+    with pytest.raises(RuntimeError, match="fit_selection"):
+        r_knn.select(ds.part("test")[0][:4])
+
+
+# ---------------------------------------------------------------------------
+# artifacts: save -> load parity for every registered family
+# ---------------------------------------------------------------------------
+
+ALL_FAMILY_SPECS = ["knn10", "knn100-ivf", "linear", "linear_mf", "mlp",
+                    "mlp_mf", "graph10", "attn10", "dattn10", "linucb"]
+
+
+def _small(spec):
+    """Benchmark-speed construction: tiny epochs for the trainables."""
+    fam = parse_spec(spec).family
+    trainable = fam in ("linear_mf", "mlp", "mlp_mf", "graph", "attn",
+                        "dattn")
+    return make_router(spec, **({"epochs": 2} if trainable else {}))
+
+
+@pytest.mark.parametrize("spec", ALL_FAMILY_SPECS)
+def test_save_load_predict_utility_bitwise(spec, ds, tmp_path):
+    r = _small(spec).fit(ds)
+    X = ds.part("test")[0]
+    s1, c1 = r.predict_utility(X)
+    path = save_router(r, tmp_path / spec)
+    assert (path / "manifest.json").exists()
+    assert (path / "state.npz").exists()
+    r2 = load_router(path)
+    assert r2.model_names == r.model_names
+    assert r2.embed_dim == ds.dim
+    s2, c2 = r2.predict_utility(X)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_save_load_selection_state(ds, tmp_path):
+    lam = 0.5 / ds.c_max
+    r = make_router("knn10").fit_selection(ds, lam)
+    X = ds.part("test")[0]
+    sel1 = r.select(X)
+    r2 = load_router(save_router(r, tmp_path / "knn10-sel"))
+    np.testing.assert_array_equal(sel1, r2.select(X))
+
+
+def test_save_unfitted_raises(tmp_path):
+    with pytest.raises(ValueError, match="fitted"):
+        save_router(make_router("linear"), tmp_path / "x")
+
+
+def test_load_rejects_future_format(ds, tmp_path):
+    import json
+    path = save_router(make_router("linear").fit(ds), tmp_path / "lin")
+    manifest = json.loads((path / "manifest.json").read_text())
+    manifest["format_version"] = 999
+    (path / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="format_version"):
+        load_router(path)
+
+
+def test_artifact_preserves_default_lam_and_ivf_layout(ds, tmp_path):
+    r = make_router("knn100-ivf@lam=0.5").fit(ds)
+    r2 = load_router(save_router(r, tmp_path / "ivf"))
+    assert r2.default_lam == 0.5
+    assert r2.index == "ivf" and r2._ivf.n_clusters == r._ivf.n_clusters
+    np.testing.assert_array_equal(np.asarray(r._ivf.ids_cm),
+                                  np.asarray(r2._ivf.ids_cm))
