@@ -1,31 +1,51 @@
-"""IVF recall/speedup sweep: recall@k and per-batch retrieval time of the
-inverted-file backend vs the exact brute-force scan, across ``nprobe``.
+"""Retrieval-backend Pareto sweep: recall@k, per-batch latency, and hot
+index bytes of every retrieval tier — exact scan, IVF, and IVF-PQ — across
+``nprobe`` and the PQ re-rank multiplier.
 
-This is the §8 deployment-scale argument made quantitative: at N support
-rows the exact scan is O(N*D) per query while IVF is O(nprobe * N/C * D),
-so with C ~ sqrt(N) lists the crossover arrives early and by N ~ 1e5 the
-probed path is several times faster at recall@k >= 0.95.
+This is the §8 deployment-scale argument made quantitative along BOTH axes
+that matter at corpus scale:
 
-Index build (k-means) is timed separately and excluded from the per-query
-comparison, matching the paper's Table-3 protocol of excluding training.
+  * time — at N support rows the exact scan is O(N*D) per query while IVF
+    is O(nprobe * N/C * D); with C ~ sqrt(N) lists the crossover arrives
+    early and by N ~ 1e5 the probed path is several times faster at
+    recall@k >= 0.95;
+  * memory — IVF still stores every raw row in its hot lists; IVF-PQ packs
+    them to ~m bytes/row (~16x less hot HBM and per-probe DMA at m=D/8) and
+    recovers near-exact recall by exactly re-ranking an ADC shortlist of
+    ``rerank * k`` candidates against the cold raw rows.
+
+Index build (k-means, PQ codebooks) is timed separately and excluded from
+the per-query comparison, matching the paper's Table-3 protocol of
+excluding training.
+
+``run(emit=path)`` (CLI: ``benchmarks.run --emit-bench path``) additionally
+writes a machine-readable ``BENCH_retrieval.json`` snapshot — p50 route
+latency, recall@k, and hot index bytes per backend at its default operating
+point — so the perf trajectory is tracked commit over commit.
 
 Env knobs: REPRO_IVF_N (support rows, default 100_000), REPRO_IVF_D (dim,
-default 64), REPRO_IVF_Q (queries, default 256), REPRO_IVF_K (default 100).
+default 64), REPRO_IVF_Q (queries, default 256), REPRO_IVF_K (default 100),
+REPRO_IVF_M (PQ subspaces, default D/4 — corpus-scale neighbour gaps are
+tight enough that the D/8 operating point needs a much larger re-rank
+budget to clear recall 0.95; D/4 keeps codes 16x smaller than raw rows).
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.knn_ivf.ops import build_ivf_index, ivf_topk
+from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
+                                       build_ivf_index, build_ivfpq_index,
+                                       ivf_topk, ivfpq_topk)
 from repro.kernels.knn_topk.ops import knn_topk
 
 from .common import RESULTS, Timer, write_csv
 
 NPROBES = (1, 2, 4, 8, 16, 32)
+RERANKS = (0, 1, 2, 4, 8, 16)
 
 
 def _clustered(n, d, n_centers, seed):
@@ -38,54 +58,124 @@ def _clustered(n, d, n_centers, seed):
     return centers, sup
 
 
-def _timed(fn, repeats=3):
-    jax.block_until_ready(fn())            # warm the jit cache, sync dispatch
-    with Timer() as t:
-        for _ in range(repeats):
+def _p50(fn, repeats=5):
+    """Median per-call wall time (jit cache warmed by the first call)."""
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        with Timer() as t:
             jax.block_until_ready(fn())
-    return t.dt / repeats
+        times.append(t.dt)
+    return float(np.median(times))
 
 
-def run(seed: int = 0):
+def _recall(idx, exact_sets, k):
+    got = np.asarray(idx)
+    return float(np.mean([len(exact_sets[i] & set(got[i])) / k
+                          for i in range(len(got))]))
+
+
+def run(seed: int = 0, emit: str | None = None):
     n = int(os.environ.get("REPRO_IVF_N", 100_000))
     d = int(os.environ.get("REPRO_IVF_D", 64))
     q_n = int(os.environ.get("REPRO_IVF_Q", 256))
     k = int(os.environ.get("REPRO_IVF_K", 100))
+    m = int(os.environ.get("REPRO_IVF_M", max(1, d // 4)))
 
     centers, sup = _clustered(n, d, n_centers=64, seed=seed)
     rng = np.random.default_rng(seed + 1)
     q = (centers[rng.integers(0, len(centers), q_n)]
          + rng.normal(size=(q_n, d))).astype(np.float32)
     q /= np.linalg.norm(q, axis=1, keepdims=True)
+    import jax.numpy as jnp
     qj, supj = jnp.asarray(q), jnp.asarray(sup)
 
-    with Timer() as t_build:
+    with Timer() as t_ivf_build:
         index = build_ivf_index(sup, seed=seed)
+    with Timer() as t_pq_build:
+        pq_index = build_ivfpq_index(sup, m=m, seed=seed)
     print(f"  ivf_recall: N={n} D={d} C={index.n_clusters} "
-          f"L={index.list_size} build={t_build.dt:.2f}s")
+          f"L={index.list_size} build: ivf={t_ivf_build.dt:.2f}s "
+          f"ivfpq={t_pq_build.dt:.2f}s (m={pq_index.m} nbits={pq_index.nbits})")
 
-    t_exact = _timed(lambda: knn_topk(qj, supj, k))
+    exact_bytes = sup.nbytes
+    t_exact = _p50(lambda: knn_topk(qj, supj, k))
     _, exact_idx = knn_topk(qj, supj, k)
     exact_sets = [set(row) for row in np.asarray(exact_idx)]
 
-    rows = []
-    for nprobe in NPROBES:
-        if nprobe > index.n_clusters:
-            break
-        t_ivf = _timed(lambda: ivf_topk(qj, index, k, nprobe=nprobe))
-        _, idx = ivf_topk(qj, index, k, nprobe=nprobe)
-        got = np.asarray(idx)
-        recall = float(np.mean([len(exact_sets[i] & set(got[i])) / k
-                                for i in range(q_n)]))
-        speedup = t_exact / max(t_ivf, 1e-12)
-        rows.append([nprobe, round(recall, 4), round(t_exact, 5),
-                     round(t_ivf, 5), round(speedup, 2)])
-        print(f"  ivf_recall nprobe={nprobe:3d}: recall@{k}={recall:.3f} "
-              f"exact={t_exact*1e3:.1f}ms ivf={t_ivf*1e3:.1f}ms "
-              f"speedup={speedup:.1f}x")
+    rows = [["exact", "-", "-", 1.0, round(t_exact, 5), 1.0,
+             round(exact_bytes / 1e6, 2)]]
+    print(f"  ivf_recall exact: t={t_exact*1e3:.1f}ms "
+          f"bytes={exact_bytes/1e6:.1f}MB")
+
+    def sweep(name, fn, params, bytes_, extra=""):
+        out = {}
+        for ps in params:
+            t = _p50(lambda: fn(**ps))
+            _, idx = fn(**ps)
+            rec = _recall(idx, exact_sets, k)
+            speedup = t_exact / max(t, 1e-12)
+            rows.append([name, ps.get("nprobe", "-"), ps.get("rerank", "-"),
+                         round(rec, 4), round(t, 5), round(speedup, 2),
+                         round(bytes_ / 1e6, 2)])
+            ptxt = " ".join(f"{kk}={vv}" for kk, vv in ps.items())
+            print(f"  ivf_recall {name} {ptxt}: recall@{k}={rec:.3f} "
+                  f"t={t*1e3:.1f}ms speedup={speedup:.1f}x{extra}")
+            out[tuple(ps.items())] = (rec, t)
+        return out
+
+    ivf_params = [{"nprobe": p} for p in NPROBES if p <= index.n_clusters]
+    ivf_res = sweep("ivf", lambda nprobe: ivf_topk(qj, index, k,
+                                                   nprobe=nprobe),
+                    ivf_params, index.index_bytes)
+
+    pq_params = [{"nprobe": p, "rerank": DEFAULT_RERANK}
+                 for p in NPROBES if p <= pq_index.n_clusters]
+    pq_params += [{"nprobe": DEFAULT_NPROBE, "rerank": r}
+                  for r in RERANKS if r != DEFAULT_RERANK]
+    pq_res = sweep("ivfpq",
+                   lambda nprobe, rerank: ivfpq_topk(qj, pq_index, k,
+                                                     nprobe=nprobe,
+                                                     rerank=rerank),
+                   pq_params, pq_index.index_bytes)
+
     write_csv(RESULTS / "ivf_recall.csv",
-              ["nprobe", f"recall@{k}", "t_exact_s", "t_ivf_s", "speedup"],
-              rows)
+              ["backend", "nprobe", "rerank", f"recall@{k}", "p50_t_s",
+               "speedup_vs_exact", "index_MB"], rows)
+
+    ratio = index.index_bytes / max(pq_index.index_bytes, 1)
+    print(f"  ivf_recall bytes: ivf={index.index_bytes/1e6:.1f}MB "
+          f"ivfpq={pq_index.index_bytes/1e6:.1f}MB ({ratio:.1f}x smaller)")
+
+    if emit:
+        ivf_pt = ivf_res[(("nprobe", DEFAULT_NPROBE),)] \
+            if (("nprobe", DEFAULT_NPROBE),) in ivf_res \
+            else list(ivf_res.values())[-1]
+        pq_key = (("nprobe", DEFAULT_NPROBE), ("rerank", DEFAULT_RERANK))
+        pq_pt = pq_res.get(pq_key, list(pq_res.values())[-1])
+        snapshot = {
+            "bench": "retrieval",
+            "n_rows": n, "dim": d, "queries": q_n, "k": k,
+            "backends": {
+                "exact": {"p50_route_latency_s": round(t_exact, 6),
+                          f"recall_at_{k}": 1.0,
+                          "index_bytes": int(exact_bytes)},
+                "ivf": {"nprobe": DEFAULT_NPROBE,
+                        "p50_route_latency_s": round(ivf_pt[1], 6),
+                        f"recall_at_{k}": round(ivf_pt[0], 4),
+                        "index_bytes": int(index.index_bytes)},
+                "ivfpq": {"nprobe": DEFAULT_NPROBE,
+                          "rerank": DEFAULT_RERANK,
+                          "m": pq_index.m, "nbits": pq_index.nbits,
+                          "p50_route_latency_s": round(pq_pt[1], 6),
+                          f"recall_at_{k}": round(pq_pt[0], 4),
+                          "index_bytes": int(pq_index.index_bytes)},
+            },
+        }
+        with open(emit, "w") as f:
+            json.dump(snapshot, f, indent=2)
+            f.write("\n")
+        print(f"  [bench] {emit}")
     return rows
 
 

@@ -15,6 +15,7 @@ writes per-table CSVs under results/.
 from __future__ import annotations
 
 import argparse
+import functools
 import os
 import sys
 import time
@@ -26,6 +27,11 @@ def main() -> None:
                     help="run every table at the full router set")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. table2,fig1")
+    ap.add_argument("--emit-bench", default=None, metavar="PATH",
+                    help="write a machine-readable retrieval perf snapshot "
+                         "(p50 route latency / recall@k / index bytes per "
+                         "backend) to PATH, e.g. BENCH_retrieval.json; "
+                         "implies running the 'ivf' sweep")
     args = ap.parse_args()
 
     from . import (bandit_online, fig1_locality, intrinsic_dim, ivf_recall,
@@ -56,12 +62,19 @@ def main() -> None:
     }
     selected = (args.only.split(",") if args.only
                 else (full_suite if args.full else quick_default))
+    if args.emit_bench:
+        # the retrieval snapshot rides on the ivf sweep; bind the emit path
+        # into its job entry so the selection loop below needs no special case
+        jobs["ivf"] = functools.partial(ivf_recall.run, emit=args.emit_bench)
+        if "ivf" not in selected:
+            selected = selected + ["ivf"]
     # quick mode: the simple-method subset, passed EXPLICITLY to the router
     # tables (full 12-router sweep via --full; its CSVs ship under results/)
     quick_routers = None
     if not args.full and not os.environ.get("REPRO_BENCH_ROUTERS"):
         quick_routers = ["knn10", "knn100", "knn10-ivf", "knn100-ivf",
-                         "linear", "linear_mf", "mlp", "mlp_mf"]
+                         "knn100-ivfpq", "linear", "linear_mf", "mlp",
+                         "mlp_mf"]
     router_jobs = {"table2", "table3", "table4", "table5", "tableD", "tableI"}
 
     print("name,us_per_call,derived")

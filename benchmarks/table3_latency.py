@@ -1,9 +1,18 @@
 """Table 3 / G.1: cumulative routing (inference) time over the RouterBench
 test sets — training/index-build excluded, exactly as in the paper.
 
-Beyond the paper's router set we also time the IVF-approximate kNN backends
-(``knn10_ivf``/``knn100_ivf``): same routing semantics, sub-linear retrieval
-(see `benchmarks/ivf_recall.py` for the recall/speedup trade-off sweep)."""
+Beyond the paper's router set we also time the approximate kNN backends
+(``knn10-ivf``/``knn100-ivf``/``knn100-ivfpq``): same routing semantics,
+sub-linear retrieval (see `benchmarks/ivf_recall.py` for the
+recall/speed/bytes trade-off sweep).
+
+For routers exposing the confidence protocol this also measures the SERVING
+hot path both ways: ``conf_fused_s`` times ``predict_with_confidence`` (one
+retrieval feeding utility + diagnostics — what `RouterService.submit_texts`
+runs) against ``conf_2pass_s`` (``predict_utility`` + ``confidence``, each
+with its own retrieval — the pre-fusion behaviour).  The gap is the
+retrieval cost the single-pass serving path saves on every
+confidence-fallback route."""
 from __future__ import annotations
 
 import time
@@ -15,31 +24,46 @@ from repro.data.routing_bench import routerbench_tasks
 
 from .common import RESULTS, bench_router, routers_from_env, write_csv
 
+EXTRA_ROUTERS = ["knn10-ivf", "knn100-ivf", "knn100-ivfpq"]
+
+
+def _timed(fn, repeats: int = 3) -> float:
+    fn()                                    # warm the jit cache
+    t0 = time.time()
+    for _ in range(repeats):
+        fn()
+    return (time.time() - t0) / repeats
+
 
 def run(seed: int = 0, routers=None):
     tasks = routerbench_tasks()
-    router_names = routers_from_env(PAPER_ORDER + ["knn10-ivf", "knn100-ivf"],
-                                    routers)
+    router_names = routers_from_env(PAPER_ORDER + EXTRA_ROUTERS, routers)
     rows = []
     for rn in router_names:
-        per_task = []
+        per_task, fused, twopass = [], 0.0, 0.0
         fitted = {}
         for tname, ds in tasks.items():
             fitted[tname] = bench_router(rn).fit(ds, seed=seed)
         for tname, ds in tasks.items():
             X = ds.part("test")[0]
             r = fitted[tname]
-            r.predict_utility(X[:8])            # warm the jit cache
-            t0 = time.time()
-            for _ in range(3):                  # stabilize
-                r.predict_utility(X)
-            per_task.append((time.time() - t0) / 3)
+            per_task.append(_timed(lambda: r.predict_utility(X)))
+            if callable(getattr(r, "predict_with_confidence", None)):
+                fused += _timed(lambda: r.predict_with_confidence(X))
+                twopass += _timed(
+                    lambda: (r.predict_utility(X), r.confidence(X)))
         total = sum(per_task)
         rows.append([rn] + [round(t, 4) for t in per_task]
-                    + [round(total / len(per_task), 4), round(total, 4)])
-        print(f"  table3 {rn}: SUM={total:.3f}s")
+                    + [round(total / len(per_task), 4), round(total, 4),
+                       round(fused, 4), round(twopass, 4)])
+        msg = f"  table3 {rn}: SUM={total:.3f}s"
+        if fused:
+            msg += (f" serve(fused)={fused:.3f}s serve(2pass)={twopass:.3f}s "
+                    f"({twopass / max(fused, 1e-9):.2f}x)")
+        print(msg)
     write_csv(RESULTS / "table3_latency.csv",
-              ["router"] + list(tasks) + ["avg_s", "sum_s"], rows)
+              ["router"] + list(tasks)
+              + ["avg_s", "sum_s", "conf_fused_s", "conf_2pass_s"], rows)
     return rows
 
 

@@ -18,7 +18,8 @@ from benchmarks.common import bench_router  # noqa: E402
 
 # spec strings (see repro.core.routers.spec): families, k variants, and the
 # IVF retrieval backend are all addressable from one grammar
-ROUTERS = ["knn10", "knn100", "knn100-ivf", "linear", "linear_mf", "mlp",
+ROUTERS = ["knn10", "knn100", "knn100-ivf", "knn100-ivfpq", "linear",
+           "linear_mf", "mlp",
            "mlp_mf", "graph10", "attn10", "dattn10"]
 
 

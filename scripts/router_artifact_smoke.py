@@ -1,5 +1,7 @@
 """CI gate for artifact backward-compat: fit, save, reload, and smoke-serve
-``knn10`` and ``linear`` end-to-end through the RoutingPipeline.
+``knn10``, ``linear``, and the product-quantized ``knn100-ivfpq`` (codebooks
++ packed codes + cold raw rows round-tripping through the format_version-2
+manifest) end-to-end through the RoutingPipeline.
 
   PYTHONPATH=src python scripts/router_artifact_smoke.py
 """
@@ -18,7 +20,7 @@ from repro.serving.router_service import RouterService
 from repro.core.dataset import RoutingDataset
 
 POOL = ["qwen3-4b", "mamba2-370m"]
-SPECS = ["knn10", "linear"]
+SPECS = ["knn10", "linear", "knn100-ivfpq@m=16,nbits=8"]
 
 
 def build_support(n=80, seed=0):

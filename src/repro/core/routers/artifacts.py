@@ -10,7 +10,10 @@ Layout (one directory per artifact)::
 State keys are ``<attr>`` for plain arrays/scalars and ``<attr>/<sub>/...``
 for nested param pytrees (list indices encoded as decimal components).  The
 kNN IVF index serializes its cluster-major layout (centroids, padded lists,
-ids, inverse norms) so a server boots straight into approximate retrieval.
+ids, inverse norms) so a server boots straight into approximate retrieval;
+the IVF-PQ variant serializes anchors, packed uint8 codes, PQ codebooks,
+and the flat cold raw rows instead (the two field sets are disjoint, which
+is how ``restore_state`` tells them apart).
 
 ``Router.state_dict()`` / ``load_state_dict()`` are driven by each family's
 ``state_attrs`` declaration; ``save_router`` / ``load_router`` wrap them with
@@ -27,13 +30,23 @@ import numpy as np
 
 from .spec import FAMILIES, router_config, spec_of
 
-FORMAT_VERSION = 1
+#: 2 adds the IVF-PQ index fields (anchors, packed codes, codebooks, cold
+#: raw rows); version-1 artifacts (raw IVF or no index) remain readable.
+FORMAT_VERSION = 2
+MIN_FORMAT_VERSION = 1
 _IVF_FIELDS = ("centroids", "sup_cm", "ids_cm", "inv_cm", "n_rows")
+_IVFPQ_FIELDS = ("centroids", "anchors", "codes_cm", "ids_cm", "inv_cm",
+                 "codebooks", "sup_flat", "n_rows", "m", "nbits")
 
 
 def _is_ivf(val) -> bool:
-    from repro.kernels.knn_ivf.ops import IVFIndex
-    return isinstance(val, IVFIndex)
+    from repro.kernels.knn_ivf.ops import IVFIndex, IVFPQIndex
+    return isinstance(val, (IVFIndex, IVFPQIndex))
+
+
+def _index_fields(val):
+    from repro.kernels.knn_ivf.ops import IVFPQIndex
+    return _IVFPQ_FIELDS if isinstance(val, IVFPQIndex) else _IVF_FIELDS
 
 
 def _flatten_tree(val, prefix, out):
@@ -88,7 +101,7 @@ def collect_state(router):
         if val is None:
             continue
         if _is_ivf(val):
-            for f in _IVF_FIELDS:
+            for f in _index_fields(val):
                 out[f"{attr}/{f}"] = np.asarray(getattr(val, f))
         elif isinstance(val, (dict, list, tuple)):
             _flatten_tree(val, attr, out)
@@ -118,6 +131,15 @@ def restore_state(router, state):
             setattr(router, attr, IVFIndex(
                 jnp.asarray(cent), jnp.asarray(sup), jnp.asarray(ids),
                 jnp.asarray(inv), int(sub["n_rows"]), sup, ids, inv))
+        elif set(sub) == set(_IVFPQ_FIELDS):
+            # assemble_ivfpq rebuilds the derived pieces (device views, host
+            # mirrors, expanded codebook matmul form) so a reloaded index is
+            # byte-identical to a freshly built one
+            from repro.kernels.knn_ivf.ops import assemble_ivfpq
+            arrays = {f: np.asarray(sub[f]) for f in _IVFPQ_FIELDS[:-3]}
+            setattr(router, attr, assemble_ivfpq(
+                **arrays, n_rows=int(sub["n_rows"]), m=int(sub["m"]),
+                nbits=int(sub["nbits"])))
         else:
             setattr(router, attr, _unflatten_tree(sub))
     return router
@@ -153,9 +175,11 @@ def load_router(path):
     path = Path(path)
     manifest = json.loads((path / "manifest.json").read_text())
     version = manifest.get("format_version")
-    if version != FORMAT_VERSION:
+    if not (isinstance(version, int)
+            and MIN_FORMAT_VERSION <= version <= FORMAT_VERSION):
         raise ValueError(f"unsupported artifact format_version {version!r} "
-                         f"at {path} (this build reads {FORMAT_VERSION})")
+                         f"at {path} (this build reads "
+                         f"{MIN_FORMAT_VERSION}..{FORMAT_VERSION})")
     fam = FAMILIES.get(manifest["family"])
     if fam is None:
         raise ValueError(f"artifact family {manifest['family']!r} is not "

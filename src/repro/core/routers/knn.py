@@ -13,25 +13,39 @@ Retrieval backends (``index=``):
     a spherical k-means coarse quantizer fit once at ``fit`` time, queries
     probe only their ``nprobe`` nearest cluster lists; O(nprobe * N/C * D)
     per query, sub-linear in the support size.
+  * ``"ivfpq"`` — product-quantized IVF: the probed lists store packed
+    ``m``-byte PQ codes instead of raw rows (~16x less hot HBM at m=D/8),
+    scored by ADC table gathers; an ADC shortlist of ``rerank * k``
+    candidates is then re-scored exactly against the raw rows, restoring
+    near-exact recall.  ``m=None`` auto-picks ~D/8 (clamped to a divisor
+    of D at fit time).
 
-When a mesh is supplied, both backends go through their mesh-sharded
+When a mesh is supplied, all backends go through their mesh-sharded
 variants in `repro.core.sharded_knn` (support rows / cluster lists sharded
 across every device, per-device top-k merged with one tiny all-gather).
 
 ``predict_utility`` / ``select`` / ``confidence`` semantics are identical
-across backends: IVF can return fewer than k valid neighbours on pathological
-probe sets (index -1 slots), which are excluded from averages and votes.
+across backends: approximate retrieval can return fewer than k valid
+neighbours on pathological probe sets (index -1 slots), which are excluded
+from averages and votes.  ``predict_with_confidence`` fuses utility
+prediction and the §8 confidence diagnostics over ONE retrieval — the
+serving layer's hot path, where running them separately would double the
+per-request retrieval cost.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.knn_ivf.ops import DEFAULT_NPROBE, build_ivf_index, ivf_topk
+from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
+                                       build_ivf_index, build_ivfpq_index,
+                                       ivf_topk, ivfpq_topk)
 from repro.kernels.knn_topk.ops import knn_topk
 from ..dataset import RoutingDataset
 from .base import Router, gold_labels, normalize_rows
 from .spec import register
+
+_INDEXES = ("exact", "ivf", "ivfpq")
 
 
 @register("knn", k_param="k", default_ks=(10, 100), supports_ivf=True,
@@ -44,9 +58,12 @@ class KNNRouter(Router):
                  use_pallas: bool = False, temperature: float = 20.0,
                  mesh=None, index: str = "exact",
                  n_clusters: int | None = None,
-                 nprobe: int = DEFAULT_NPROBE):
-        if index not in ("exact", "ivf"):
-            raise ValueError(f"index must be 'exact' or 'ivf', got {index!r}")
+                 nprobe: int = DEFAULT_NPROBE,
+                 m: int | None = None, nbits: int = 8,
+                 rerank: int = DEFAULT_RERANK):
+        if index not in _INDEXES:
+            raise ValueError(f"index must be one of {_INDEXES}, "
+                             f"got {index!r}")
         self.k = k
         self.weights = weights
         self.use_pallas = use_pallas
@@ -55,9 +72,13 @@ class KNNRouter(Router):
         self.index = index
         self.n_clusters = n_clusters
         self.nprobe = nprobe
-        self.name = f"kNN (k={k})" + (" IVF" if index == "ivf" else "")
+        self.m = m
+        self.nbits = nbits
+        self.rerank = rerank
+        suffix = {"exact": "", "ivf": " IVF", "ivfpq": " IVF-PQ"}[index]
+        self.name = f"kNN (k={k}){suffix}"
 
-    # ---- fit = store the support set (+ IVF coarse quantizer) ----
+    # ---- fit = store the support set (+ coarse quantizer / PQ codebooks) --
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
         self._record_fit(ds, seed)
         X, S, C = ds.part("train")
@@ -66,12 +87,27 @@ class KNNRouter(Router):
         self._C = C.astype(np.float32)
         if self.index == "ivf":
             self._ivf = build_ivf_index(self._X, self.n_clusters, seed=seed)
+        elif self.index == "ivfpq":
+            self._ivf = build_ivfpq_index(self._X, self.n_clusters,
+                                          m=self.m, nbits=self.nbits,
+                                          seed=seed)
         return self
 
     def _neighbors(self, X: np.ndarray):
         q = normalize_rows(X)
         k = min(self.k, len(self._X))
-        if self.index == "ivf":
+        if self.index == "ivfpq":
+            if self.mesh is not None:
+                from ..sharded_knn import sharded_ivfpq_topk
+                sims, idx = sharded_ivfpq_topk(jnp.asarray(q), self._ivf, k,
+                                               self.mesh, nprobe=self.nprobe,
+                                               rerank=self.rerank)
+            else:
+                sims, idx = ivfpq_topk(jnp.asarray(q), self._ivf, k,
+                                       nprobe=self.nprobe,
+                                       rerank=self.rerank,
+                                       use_pallas=self.use_pallas)
+        elif self.index == "ivf":
             if self.mesh is not None:
                 from ..sharded_knn import sharded_ivf_topk
                 sims, idx = sharded_ivf_topk(jnp.asarray(q), self._ivf, k,
@@ -90,8 +126,8 @@ class KNNRouter(Router):
         return np.asarray(sims), np.asarray(idx)
 
     # ---- utility ----
-    def predict_utility(self, X: np.ndarray):
-        sims, idx = self._neighbors(X)
+    def _utility_from(self, sims: np.ndarray, idx: np.ndarray):
+        """Neighbour-weighted utility/cost estimates from one retrieval."""
         valid = idx >= 0                        # IVF may return short lists
         s_nb = self._S[np.maximum(idx, 0)]      # (Q, k, M)
         c_nb = self._C[np.maximum(idx, 0)]
@@ -106,6 +142,10 @@ class KNNRouter(Router):
         s_hat = np.einsum("qk,qkm->qm", w, s_nb)
         c_hat = np.einsum("qk,qkm->qm", w, c_nb)
         return s_hat, c_hat
+
+    def predict_utility(self, X: np.ndarray):
+        sims, idx = self._neighbors(X)
+        return self._utility_from(sims, idx)
 
     # ---- selection: neighbour majority vote ----
     def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
@@ -128,12 +168,8 @@ class KNNRouter(Router):
         return np.argmax(counts, axis=1)
 
     # ---- practitioner diagnostics (§8): per-query confidence ----
-    def confidence(self, X: np.ndarray):
-        """Returns (kth_sim, neighbour_agreement) per query: low kth-neighbour
-        similarity => sparse coverage; low agreement => uncertainty.  With an
-        IVF backend a -inf kth_sim flags a query whose probe set could not
-        fill k neighbours — out-of-coverage by construction."""
-        sims, idx = self._neighbors(X)
+    def _confidence_from(self, sims: np.ndarray, idx: np.ndarray):
+        """(kth_sim, neighbour_agreement) from one retrieval's results."""
         kth = sims[:, -1]
         valid = idx >= 0
         best = np.argmax(self._S[np.maximum(idx, 0)]
@@ -142,3 +178,47 @@ class KNNRouter(Router):
             [np.bincount(b[v]).max() / max(v.sum(), 1) if v.any() else 0.0
              for b, v in zip(best, valid)])
         return kth, mode_frac
+
+    def confidence(self, X: np.ndarray):
+        """Returns (kth_sim, neighbour_agreement) per query: low kth-neighbour
+        similarity => sparse coverage; low agreement => uncertainty.  With an
+        IVF backend a -inf kth_sim flags a query whose probe set could not
+        fill k neighbours — out-of-coverage by construction."""
+        sims, idx = self._neighbors(X)
+        return self._confidence_from(sims, idx)
+
+    def predict_with_confidence(self, X: np.ndarray):
+        """One retrieval feeding both outputs: (s_hat, c_hat, kth_sim,
+        agreement).  Identical numbers to calling ``predict_utility`` and
+        ``confidence`` separately — minus the second `_neighbors` search,
+        which on the serving hot path is the whole cost of the call."""
+        sims, idx = self._neighbors(X)
+        s_hat, c_hat = self._utility_from(sims, idx)
+        kth, agree = self._confidence_from(sims, idx)
+        return s_hat, c_hat, kth, agree
+
+    # ---- artifact contract: don't store the support rows twice ----
+    def state_dict(self):
+        """The approximate indexes already hold every support row (IVF-PQ's
+        flat cold tier / IVF's cluster-major lists), so serializing ``_X``
+        alongside them would double the artifact — the dominant tensor at
+        the corpus scales the PQ tier targets.  Drop it and rebuild at
+        load."""
+        state = super().state_dict()
+        if self.index != "exact":
+            state.pop("_X", None)
+        return state
+
+    def load_state_dict(self, state):
+        super().load_state_dict(state)
+        if (getattr(self, "_X", None) is None
+                and getattr(self, "_ivf", None) is not None):
+            if self.index == "ivfpq":
+                self._X = self._ivf.sup_flat_h     # same array, same bytes
+            else:
+                # inverse of the cluster-major scatter: exact float copies
+                ids, sup = self._ivf.ids_h, self._ivf.sup_h
+                X = np.empty((self._ivf.n_rows, sup.shape[2]), np.float32)
+                X[ids[ids >= 0]] = sup[ids >= 0]
+                self._X = X
+        return self

@@ -7,10 +7,12 @@ construction tables.
 
 Spec-string grammar (RouteLLM-style addressable routers)::
 
-    <family><k?>[-ivf][@key=val,...]
+    <family><k?>[-ivf|-ivfpq][@key=val,...]
 
     knn100              kNN router, k=100, exact retrieval
     knn100-ivf          same, inverted-file approximate retrieval
+    knn100-ivfpq        same, product-quantized IVF (ADC + exact re-rank)
+    knn100-ivfpq@m=16,nbits=8,rerank=4   ... with explicit PQ knobs
     knn100-ivf@lam=0.5  ... with a default routing lambda of 0.5
     mlp@epochs=40       MLP router with a constructor override
     graph10@lr=1e-3     constructor kwargs are typed (int/float/bool/str)
@@ -34,16 +36,20 @@ from typing import Dict, Mapping, Optional, Tuple
 #: reserved spec keys handled by the spec layer itself (not the constructor)
 RESERVED_KEYS = ("lam",)
 
-_SPEC_RE = re.compile(r"^(?P<family>[a-z][a-z0-9_]*?)(?P<k>\d+)?(?P<ivf>-ivf)?$")
+_SPEC_RE = re.compile(
+    r"^(?P<family>[a-z][a-z0-9_]*?)(?P<k>\d+)?(?P<ivf>-ivf(?P<pq>pq)?)?$")
 
 
 @dataclasses.dataclass(frozen=True)
 class RouterSpec:
-    """Parsed form of a spec string."""
+    """Parsed form of a spec string.  ``pq`` refines ``ivf``: the ``-ivfpq``
+    suffix parses to ``ivf=True, pq=True`` (product quantization is a
+    storage tier of the inverted-file index, not a separate backend)."""
     family: str
     k: Optional[int] = None
     ivf: bool = False
     kwargs: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    pq: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +69,8 @@ class RouterFamily:
             yield format_spec(RouterSpec(self.family, k=k))
             if self.supports_ivf:
                 yield format_spec(RouterSpec(self.family, k=k, ivf=True))
+                yield format_spec(RouterSpec(self.family, k=k, ivf=True,
+                                             pq=True))
 
 
 FAMILIES: Dict[str, RouterFamily] = {}
@@ -110,12 +118,14 @@ def parse_spec(spec: str) -> RouterSpec:
     if not isinstance(spec, str) or not spec.strip():
         raise ValueError(f"empty router spec: {spec!r}")
     base, sep, kwstr = spec.strip().partition("@")
-    if base.endswith("_ivf"):                      # legacy alias knn10_ivf
+    if base.endswith("_ivfpq"):                    # legacy alias knn10_ivfpq
+        base = base[:-6] + "-ivfpq"
+    elif base.endswith("_ivf"):                    # legacy alias knn10_ivf
         base = base[:-4] + "-ivf"
     m = _SPEC_RE.fullmatch(base)
     if not m:
         raise ValueError(f"unparseable router spec {spec!r} "
-                         f"(grammar: <family><k?>[-ivf][@key=val,...])")
+                         f"(grammar: <family><k?>[-ivf|-ivfpq][@key=val,...])")
     family = m.group("family")
     fam = FAMILIES.get(family)
     if fam is None:
@@ -126,6 +136,7 @@ def parse_spec(spec: str) -> RouterSpec:
         raise ValueError(f"family {family!r} takes no <k> suffix "
                          f"(spec {spec!r})")
     ivf = m.group("ivf") is not None
+    pq = m.group("pq") is not None
     if ivf and not fam.supports_ivf:
         raise ValueError(f"family {family!r} has no IVF backend (spec {spec!r})")
 
@@ -144,7 +155,7 @@ def parse_spec(spec: str) -> RouterSpec:
                     f"(spec {spec!r}); constructor takes: "
                     f"{', '.join(sorted(fam.ctor_params))}")
             kwargs[key] = _parse_value(raw)
-    return RouterSpec(family, k=k, ivf=ivf, kwargs=kwargs)
+    return RouterSpec(family, k=k, ivf=ivf, kwargs=kwargs, pq=pq)
 
 
 def format_spec(spec: RouterSpec) -> str:
@@ -153,7 +164,7 @@ def format_spec(spec: RouterSpec) -> str:
     if spec.k is not None:
         s += str(spec.k)
     if spec.ivf:
-        s += "-ivf"
+        s += "-ivfpq" if spec.pq else "-ivf"
     if spec.kwargs:
         s += "@" + ",".join(f"{k}={_format_value(v)}"
                             for k, v in sorted(spec.kwargs.items()))
@@ -174,7 +185,7 @@ def make_router(spec, **overrides):
     if spec.k is not None:
         kw[fam.k_param] = spec.k
     if spec.ivf:
-        kw["index"] = "ivf"
+        kw["index"] = "ivfpq" if spec.pq else "ivf"
     kw.update(spec.kwargs)
     kw.update(overrides)
     lam = kw.get("lam", None)
@@ -200,8 +211,9 @@ def spec_of(router) -> str:
                          f"router family (missing @register)")
     fam = FAMILIES[family]
     k = getattr(router, fam.k_param) if fam.k_param else None
-    ivf = getattr(router, "index", None) == "ivf"
-    return format_spec(RouterSpec(family, k=k, ivf=ivf))
+    index = getattr(router, "index", None)
+    return format_spec(RouterSpec(family, k=k, ivf=index in ("ivf", "ivfpq"),
+                                  pq=index == "ivfpq"))
 
 
 def router_config(router) -> Dict[str, object]:

@@ -23,6 +23,13 @@ static width S) are planned on the host, and then
 
 Per-query cost is O(nprobe * L * D) against the brute-force O(N * D);
 ``nprobe == n_clusters`` recovers the exact result.
+
+``build_ivfpq_index`` / ``ivfpq_topk`` add the product-quantized tier on the
+SAME coarse partition and tiling plan: hot lists hold packed uint8 codes
+(`pq.py`) scored by ADC table lookups (host gathers / jitted tiles /
+`pq_kernel.py`), and a shortlist of ``rerank * k`` ADC candidates is
+re-scored exactly against the raw rows kept as a flat cold tier — two-stage
+search that trades ~16x hot HBM for a ~rerank*k-row gather per query.
 """
 from __future__ import annotations
 
@@ -34,11 +41,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import pq as pqmod
 from .kernel import ivf_topk_pallas
+from .pq_kernel import ivfpq_adc_pallas
 from .ref import ivf_probe
 
 DEFAULT_NPROBE = 8
-_LANE_PAD = 8       # list-length rounding; bump to 128 for compiled TPU runs
+# ADC shortlist multiplier: at corpus scale (1e5+ rows) within-cluster score
+# gaps shrink while quantization error does not, so the shortlist needs
+# headroom — 8x restores recall@100 > 0.95 at m=D/4 (benchmarks/ivf_recall)
+DEFAULT_RERANK = 8
+# default list-length rounding; pass lane_pad=128 to the builders for
+# compiled (non-interpret) TPU runs so every list is lane-aligned
+_LANE_PAD = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +78,71 @@ class IVFIndex:
     @property
     def list_size(self) -> int:
         return self.sup_cm.shape[1]
+
+    @property
+    def index_bytes(self) -> int:
+        """Hot (per-probe-scanned) storage: raw lists + ids + norms +
+        centroids."""
+        return int(self.sup_h.nbytes + self.ids_h.nbytes + self.inv_h.nbytes
+                   + np.asarray(self.centroids).nbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFPQIndex:
+    """Product-quantized IVF index: same coarse partition as `IVFIndex`, but
+    the hot lists store packed PQ codes of cluster residuals instead of raw
+    rows (~16x less HBM and per-probe DMA at m=D/8).  The raw rows survive
+    only as the flat cold tier ``sup_flat`` that exact re-ranking reads for
+    a shortlist of ~rerank*k rows per query (see `pq.py` for the ADC math).
+    Device arrays feed the Pallas/tiles/sharded paths; host mirrors feed the
+    CPU traversal without a device round-trip."""
+    centroids: jnp.ndarray     # (C, D) f32, unit-norm coarse quantizer
+    anchors: jnp.ndarray       # (C, D) f32, raw-space list means
+    codes_cm: jnp.ndarray      # (C, L, MB) u8, packed PQ codes, 0 padding
+    ids_cm: jnp.ndarray        # (C, L) i32, -1 padding
+    inv_cm: jnp.ndarray        # (C, L) f32, EXACT 1/||row||, 0 padding
+    codebooks: jnp.ndarray     # (m, 2^nbits, D/m) f32
+    sup_flat: jnp.ndarray      # (N, D) f32 raw rows, original order (cold)
+    n_rows: int
+    m: int                     # subspaces actually used (divides D)
+    nbits: int                 # 4 or 8
+    codes_h: np.ndarray        # host mirrors of the hot lists
+    ids_h: np.ndarray
+    inv_h: np.ndarray
+    anchors_h: np.ndarray
+    codebooks_h: np.ndarray
+    sup_flat_h: np.ndarray
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def list_size(self) -> int:
+        return self.codes_cm.shape[1]
+
+    @property
+    def code_bytes(self) -> int:
+        """Packed bytes per row (m*nbits/8)."""
+        return self.codes_cm.shape[2]
+
+    @functools.cached_property
+    def cb_mat(self) -> jnp.ndarray:
+        """Block-diagonal ``(m*2^nbits, D)`` codebook expansion, derived
+        lazily — only the Pallas ADC path reads it (the one-matmul in-kernel
+        LUT build); host/tiles scans never materialize it."""
+        return jnp.asarray(pqmod.expand_codebooks(self.codebooks_h))
+
+    @property
+    def index_bytes(self) -> int:
+        """Hot (per-probe-scanned) storage: packed codes + ids + norms +
+        centroids + anchors + codebooks.  ``sup_flat`` is the cold re-rank
+        tier and is NOT counted — it is touched only for ~rerank*k rows per
+        query and can live off-device; the derived ``cb_mat`` scratch
+        (Pallas path only) is likewise excluded."""
+        return int(self.codes_h.nbytes + self.ids_h.nbytes + self.inv_h.nbytes
+                   + np.asarray(self.centroids).nbytes + self.anchors_h.nbytes
+                   + self.codebooks_h.nbytes)
 
 
 def default_n_clusters(n_rows: int) -> int:
@@ -135,21 +215,19 @@ def _balanced_lists(xn: np.ndarray, assign: np.ndarray, n_clusters: int,
     return lists
 
 
-def build_ivf_index(support, n_clusters: int | None = None, seed: int = 0,
-                    iters: int = 10, balance: float = 1.5) -> IVFIndex:
-    """support (N, D) raw rows (normalized internally for clustering only —
-    scoring keeps the raw rows so results match `knn_topk` bit-for-bit).
-    ``n_clusters`` is a TARGET: oversized k-means cells are split until no
-    list exceeds ``balance * N/n_clusters`` rows, so the final cluster count
-    can be somewhat higher."""
-    sup = np.asarray(support, np.float32)
+def _coarse_partition(sup: np.ndarray, n_clusters: int | None, seed: int,
+                      iters: int, balance: float, lane_pad: int):
+    """Shared front half of both index builders: spherical k-means +
+    principal-direction balancing/relabelling.  Returns (centroids (C, D)
+    unit-norm, member-row lists ordered along the centroids' top principal
+    direction, padded list length, per-row norms (N, 1))."""
     n, d = sup.shape
     c = min(n_clusters or default_n_clusters(n), n)
     norms = np.maximum(np.linalg.norm(sup, axis=1, keepdims=True), 1e-12)
     xn = sup / norms
     cent, assign = _spherical_kmeans(xn, c, seed, iters)
 
-    cap = max(_LANE_PAD, int(math.ceil(balance * n / c)))
+    cap = max(lane_pad, int(math.ceil(balance * n / c)))
     lists = _balanced_lists(xn, assign, c, cap, seed)
     c = len(lists)
     # relabel clusters along their top principal direction: cluster ids are
@@ -161,20 +239,104 @@ def build_ivf_index(support, n_clusters: int | None = None, seed: int = 0,
     lists = [lists[i] for i in perm]
     cents0 = cents0[perm]
     lsz = int(np.ceil(max(max(len(r) for r in lists), 1)
-                      / _LANE_PAD) * _LANE_PAD)
+                      / lane_pad) * lane_pad)
     centroids = np.zeros((c, d), np.float32)
+    for ci in range(c):
+        centroids[ci] = cents0[ci] / max(float(np.linalg.norm(cents0[ci])),
+                                         1e-12)
+    return centroids, lists, lsz, norms
+
+
+def build_ivf_index(support, n_clusters: int | None = None, seed: int = 0,
+                    iters: int = 10, balance: float = 1.5,
+                    lane_pad: int = _LANE_PAD) -> IVFIndex:
+    """support (N, D) raw rows (normalized internally for clustering only —
+    scoring keeps the raw rows so results match `knn_topk` bit-for-bit).
+    ``n_clusters`` is a TARGET: oversized k-means cells are split until no
+    list exceeds ``balance * N/n_clusters`` rows, so the final cluster count
+    can be somewhat higher.  ``lane_pad`` rounds the padded list length (and
+    floors the balance cap): 8 keeps interpret-mode/CPU indexes compact,
+    128 lane-aligns every list for compiled TPU runs."""
+    sup = np.asarray(support, np.float32)
+    n, d = sup.shape
+    centroids, lists, lsz, norms = _coarse_partition(
+        sup, n_clusters, seed, iters, balance, lane_pad)
+    c = len(lists)
     sup_cm = np.zeros((c, lsz, d), np.float32)
     ids_cm = np.full((c, lsz), -1, np.int32)
     inv_cm = np.zeros((c, lsz), np.float32)
     for ci, rows in enumerate(lists):
-        centroids[ci] = cents0[ci] / max(float(np.linalg.norm(cents0[ci])),
-                                         1e-12)
         sup_cm[ci, :len(rows)] = sup[rows]
         ids_cm[ci, :len(rows)] = rows
         inv_cm[ci, :len(rows)] = 1.0 / norms[rows, 0]
     return IVFIndex(jnp.asarray(centroids), jnp.asarray(sup_cm),
                     jnp.asarray(ids_cm), jnp.asarray(inv_cm), n,
                     sup_cm, ids_cm, inv_cm)
+
+
+def assemble_ivfpq(centroids: np.ndarray, anchors: np.ndarray,
+                   codes_cm: np.ndarray, ids_cm: np.ndarray,
+                   inv_cm: np.ndarray, codebooks: np.ndarray,
+                   sup_flat: np.ndarray, n_rows: int, m: int,
+                   nbits: int) -> IVFPQIndex:
+    """Wrap the serializable arrays into an `IVFPQIndex` (device views plus
+    host mirrors).  Shared by `build_ivfpq_index` and the artifact loader so
+    a reloaded index is byte-identical to a freshly built one."""
+    return IVFPQIndex(
+        jnp.asarray(centroids), jnp.asarray(anchors), jnp.asarray(codes_cm),
+        jnp.asarray(ids_cm), jnp.asarray(inv_cm), jnp.asarray(codebooks),
+        jnp.asarray(sup_flat), int(n_rows), int(m), int(nbits),
+        codes_cm, ids_cm, inv_cm, anchors, codebooks, sup_flat)
+
+
+def build_ivfpq_index(support, n_clusters: int | None = None,
+                      m: int | None = None, nbits: int = 8, seed: int = 0,
+                      iters: int = 10, balance: float = 1.5,
+                      lane_pad: int = _LANE_PAD,
+                      pq_iters: int = 8) -> IVFPQIndex:
+    """IVF-PQ index build: the identical coarse partition as
+    `build_ivf_index` (same k-means seed path -> same lists, so recall
+    differences against plain IVF isolate the quantization), then per-list
+    raw-space anchors, residual PQ codebooks (`pq.train_pq`), and packed
+    per-row codes.  ``m`` defaults to ~D/8 and is clamped to the largest
+    divisor of D (spec strings stay valid across embedding dims); ``nbits``
+    is 8 (one byte per code) or 4 (two codes per byte, m must stay even
+    after clamping)."""
+    sup = np.asarray(support, np.float32)
+    n, d = sup.shape
+    m = pqmod.default_m(d) if m is None else pqmod.effective_m(d, m)
+    if nbits == 4 and m % 2:
+        m = max(2, m - 1)
+        m = pqmod.effective_m(d, m)
+        if m % 2:
+            raise ValueError(f"nbits=4 needs an even subspace count; no even "
+                             f"divisor of D={d} near the requested m")
+    centroids, lists, lsz, norms = _coarse_partition(
+        sup, n_clusters, seed, iters, balance, lane_pad)
+    c = len(lists)
+
+    anchors = np.zeros((c, d), np.float32)
+    for ci, rows in enumerate(lists):
+        anchors[ci] = sup[rows].mean(axis=0)
+    order = np.concatenate(lists)
+    owner = np.repeat(np.arange(c), [len(r) for r in lists])
+    residuals = sup[order] - anchors[owner]
+    codebooks = pqmod.train_pq(residuals, m, nbits, seed=seed + 3,
+                               iters=pq_iters)
+    codes_all = pqmod.pack_codes(pqmod.encode_pq(residuals, codebooks), nbits)
+
+    mb = codes_all.shape[1]
+    codes_cm = np.zeros((c, lsz, mb), np.uint8)
+    ids_cm = np.full((c, lsz), -1, np.int32)
+    inv_cm = np.zeros((c, lsz), np.float32)
+    at = 0
+    for ci, rows in enumerate(lists):
+        codes_cm[ci, :len(rows)] = codes_all[at:at + len(rows)]
+        ids_cm[ci, :len(rows)] = rows
+        inv_cm[ci, :len(rows)] = 1.0 / norms[rows, 0]
+        at += len(rows)
+    return assemble_ivfpq(centroids, anchors, codes_cm, ids_cm, inv_cm,
+                          codebooks, sup, n, m, nbits)
 
 
 def plan_tile_probes(q_probe: np.ndarray, block_q: int):
@@ -234,6 +396,42 @@ def _score_tiles(queries, q_probe, tile_probe, tile_valid,
     return scores.reshape(qp, k), idx.reshape(qp, k).astype(jnp.int32)
 
 
+def _pair_layout(q_probe: np.ndarray):
+    """(query, probe) pairs sorted by cluster so each cluster's pairs form
+    one contiguous segment.  Returns (pair_c (Q*P,), sorted query row ids,
+    sort order)."""
+    qn, p = q_probe.shape
+    pair_c = q_probe.reshape(-1)                       # (Q*P,)
+    pair_q = np.repeat(np.arange(qn), p)
+    order = np.argsort(pair_c, kind="stable")
+    return pair_c, pair_q[order], order
+
+
+def _topk_from_pair_sims(sims_sorted: np.ndarray, order: np.ndarray,
+                         pair_c: np.ndarray, ids_h: np.ndarray, qn: int,
+                         k: int):
+    """Shared tail of both host traversals: un-sort the per-pair similarity
+    rows back to query-major, flatten each query's candidates, and take the
+    top-k (argpartition + stable sort; -inf slots emit id -1)."""
+    p_l = sims_sorted.shape[1]
+    p = len(pair_c) // qn
+    sims = np.empty_like(sims_sorted)
+    sims[order] = sims_sorted                          # back to query-major
+    sims = sims.reshape(qn, p * p_l)
+    ids = ids_h[pair_c].reshape(qn, p * p_l)
+    if k < p * p_l:
+        part = np.argpartition(-sims, k - 1, axis=1)[:, :k]
+    else:
+        part = np.broadcast_to(np.arange(p * p_l), (qn, p * p_l))
+    psims = np.take_along_axis(sims, part, axis=1)
+    order2 = np.argsort(-psims, axis=1, kind="stable")[:, :k]
+    top = np.take_along_axis(part, order2, axis=1)
+    scores = np.take_along_axis(sims, top, axis=1)
+    idx = np.take_along_axis(ids, top, axis=1).astype(np.int32)
+    idx[~np.isfinite(scores)] = -1
+    return jnp.asarray(scores), jnp.asarray(idx)
+
+
 def _score_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFIndex,
                       k: int):
     """CPU inverted-list traversal: (query, probe) PAIRS are sorted by
@@ -242,15 +440,12 @@ def _score_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFIndex,
     support gather ever materializes, no tile-union waste: exactly
     Q * nprobe * L * D MACs and each probed list is read once."""
     qn, _ = q.shape
-    p = q_probe.shape[1]
     c, l, _ = index.sup_h.shape
-    pair_c = q_probe.reshape(-1)                       # (Q*P,)
-    pair_q = np.repeat(np.arange(qn), p)
-    order = np.argsort(pair_c, kind="stable")
+    pair_c, q_rows, order = _pair_layout(q_probe)
     sorted_c = pair_c[order]
-    qs = q[pair_q[order]]                              # (Q*P, D)
+    qs = q[q_rows]                                     # (Q*P, D)
 
-    sims_sorted = np.empty((qn * p, l), np.float32)
+    sims_sorted = np.empty((len(pair_c), l), np.float32)
     starts = np.searchsorted(sorted_c, np.arange(c))
     ends = np.searchsorted(sorted_c, np.arange(c), side="right")
     for ci in np.unique(sorted_c):
@@ -259,22 +454,136 @@ def _score_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFIndex,
     inv_pairs = index.inv_h[sorted_c]                  # (Q*P, L)
     sims_sorted *= inv_pairs
     sims_sorted[inv_pairs == 0] = -np.inf              # list padding rows
+    return _topk_from_pair_sims(sims_sorted, order, pair_c, index.ids_h,
+                                qn, k)
 
-    sims = np.empty_like(sims_sorted)
-    sims[order] = sims_sorted                          # back to query-major
-    sims = sims.reshape(qn, p * l)
-    ids = index.ids_h[pair_c].reshape(qn, p * l)
-    if k < p * l:
-        part = np.argpartition(-sims, k - 1, axis=1)[:, :k]
-    else:
-        part = np.broadcast_to(np.arange(p * l), (qn, p * l))
-    psims = np.take_along_axis(sims, part, axis=1)
-    order2 = np.argsort(-psims, axis=1, kind="stable")[:, :k]
-    top = np.take_along_axis(part, order2, axis=1)
-    scores = np.take_along_axis(sims, top, axis=1)
-    idx = np.take_along_axis(ids, top, axis=1).astype(np.int32)
-    idx[~np.isfinite(scores)] = -1
-    return jnp.asarray(scores), jnp.asarray(idx)
+
+def _adc_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFPQIndex,
+                    k: int):
+    """CPU ADC traversal — the PQ twin of `_score_pairs_host`: one (m, K)
+    LUT per query built with a single batched einsum, then each cluster's
+    contiguous pair segment is scored by LUT GATHERS against the cluster's
+    packed codes (m byte-indexed reads per row instead of a D-MAC dot), plus
+    the per-pair anchor dot and the EXACT stored inverse norms."""
+    qn, _ = q.shape
+    c, l, mb = index.codes_h.shape
+    m, kk = index.m, 2 ** index.nbits
+    pair_c, q_rows, order = _pair_layout(q_probe)
+    sorted_c = pair_c[order]
+
+    lut = pqmod.adc_lut(q, index.codebooks_h).reshape(qn, m * kk)
+    offs = (np.arange(m) * kk).astype(np.int32)
+    aq = np.einsum("pd,pd->p", q[q_rows],
+                   index.anchors_h[sorted_c]).astype(np.float32)
+
+    sims_sorted = np.empty((len(pair_c), l), np.float32)
+    starts = np.searchsorted(sorted_c, np.arange(c))
+    ends = np.searchsorted(sorted_c, np.arange(c), side="right")
+    for ci in np.unique(sorted_c):
+        s0, s1 = starts[ci], ends[ci]
+        codes = pqmod.unpack_codes(index.codes_h[ci], m, index.nbits) + offs
+        lseg = lut[q_rows[s0:s1]]                      # (P_c, m*K)
+        acc = lseg[:, codes[:, 0]]                     # (P_c, L)
+        for j in range(1, m):                          # accumulate in place:
+            acc += lseg[:, codes[:, j]]                # no (P_c, L, m) temp
+        sims_sorted[s0:s1] = acc
+    sims_sorted += aq[:, None]
+    inv_pairs = index.inv_h[sorted_c]
+    sims_sorted *= inv_pairs
+    sims_sorted[inv_pairs == 0] = -np.inf              # list padding rows
+    return _topk_from_pair_sims(sims_sorted, order, pair_c, index.ids_h,
+                                qn, k)
+
+
+def _sorted_tile_plan(queries, q_probe: np.ndarray, block_q: int):
+    """Shared tiling front-end of the tiles/Pallas paths: sort queries by
+    primary cluster so tiles become probe-coherent (the static slot width S
+    stays near nprobe instead of block_q * nprobe — the index builders order
+    cluster ids along the centroids' top principal direction, so nearby ids
+    are nearby clusters), pad to a tile multiple, and plan the per-tile slot
+    lists.  Returns (q_sorted, qp_sorted, tile_probe, tile_valid, inv_order,
+    bq)."""
+    Q = len(q_probe)
+    order = np.argsort(q_probe[:, 0], kind="stable")
+    inv_order = np.argsort(order, kind="stable")
+    bq = min(block_q, Q)
+    pad = (-Q) % bq
+    qp_sorted = np.pad(q_probe[order], ((0, pad), (0, 0)), constant_values=-1)
+    q_sorted = jnp.pad(queries[jnp.asarray(order)], ((0, pad), (0, 0)))
+    tile_probe, tile_valid = plan_tile_probes(qp_sorted, bq)
+    return q_sorted, qp_sorted, tile_probe, tile_valid, inv_order, bq
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "m", "nbits"))
+def _adc_tiles(queries, q_probe, tile_probe, tile_valid, codes_cm, ids_cm,
+               inv_cm, anchors, codebooks, k: int, bq: int, m: int,
+               nbits: int):
+    """Tile-coherent ADC traversal (jnp twin of the Pallas ADC kernel):
+    build every query's (m, K) LUT with one einsum, gather each tile's
+    PACKED slot lists once, score them by flat-LUT gather + anchor dot, then
+    mask every query down to the rows of its own probe set — identical tile
+    semantics to `_score_tiles`, with table gathers in place of the (L, D)
+    matmul."""
+    qp, d = queries.shape
+    t, s = tile_probe.shape
+    l = codes_cm.shape[1]
+    p = q_probe.shape[1]
+    kk = 2 ** nbits
+
+    qf = queries.astype(jnp.float32)
+    lut = jnp.einsum("qmd,mkd->qmk", qf.reshape(qp, m, d // m), codebooks,
+                     preferred_element_type=jnp.float32)
+    lut = lut.reshape(t, bq, m * kk)
+
+    codes = pqmod.unpack_codes_jnp(
+        jnp.take(codes_cm, tile_probe, axis=0), m, nbits)   # (T, S, L, m)
+    codes = codes.reshape(t, 1, s * l, m)
+    # accumulate per subspace (static loop): peak memory stays (T, BQ, S*L)
+    # instead of the m-times-larger all-subspace partials tensor
+    sims = jnp.zeros((t, bq, s * l), jnp.float32)
+    for j in range(m):
+        cj = jnp.broadcast_to(codes[..., j] + j * kk, (t, bq, s * l))
+        sims = sims + jnp.take_along_axis(lut, cj, axis=2)
+
+    qt = qf.reshape(t, bq, d)
+    anch = jnp.take(anchors, tile_probe, axis=0)            # (T, S, D)
+    aq = jax.lax.dot_general(qt, anch, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)  # (T, BQ, S)
+    sims = sims + jnp.repeat(aq, l, axis=2)
+    ids = jnp.take(ids_cm, tile_probe, axis=0)              # (T, S, L)
+    inv = jnp.take(inv_cm, tile_probe, axis=0)
+    sims = sims * inv.reshape(t, 1, s * l)
+
+    probed = jnp.any(q_probe.reshape(t, bq, p, 1)
+                     == tile_probe.reshape(t, 1, 1, s), axis=2)  # (T, BQ, S)
+    ok = (probed & (tile_valid != 0).reshape(t, 1, s))[..., None] \
+        & (ids >= 0).reshape(t, 1, s, l)
+    sims = jnp.where(ok.reshape(t, bq, s * l), sims, -jnp.inf)
+
+    scores, pos = jax.lax.top_k(sims, k)                    # (T, BQ, k)
+    cand_i = jnp.broadcast_to(ids.reshape(t, 1, s * l), sims.shape)
+    idx = jnp.take_along_axis(cand_i, pos, axis=2)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores.reshape(qp, k), idx.reshape(qp, k).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rerank_exact(queries, sup_flat, shortlist_idx, k: int):
+    """Stage 2 of the two-stage search: exact cosine re-scoring of the ADC
+    shortlist against the raw rows of ONLY those candidates (a (Q, kk, D)
+    gather from the cold tier), with the same on-the-fly normalization as
+    `knn_topk_reference` so re-ranked scores are bit-comparable to the exact
+    scan.  -1 shortlist slots stay -inf/-1."""
+    rows = jnp.take(sup_flat, jnp.maximum(shortlist_idx, 0), axis=0)
+    norm2 = jnp.sum(jnp.square(rows.astype(jnp.float32)), axis=-1)
+    sims = jnp.einsum("qd,qkd->qk", queries.astype(jnp.float32), rows,
+                      preferred_element_type=jnp.float32)
+    sims = sims * jax.lax.rsqrt(norm2 + 1e-12)
+    sims = jnp.where(shortlist_idx >= 0, sims, -jnp.inf)
+    scores, pos = jax.lax.top_k(sims, k)
+    idx = jnp.take_along_axis(shortlist_idx, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores, idx.astype(jnp.int32)
 
 
 def ivf_topk(queries, index: IVFIndex, k: int,
@@ -289,7 +598,6 @@ def ivf_topk(queries, index: IVFIndex, k: int,
     (jittable XLA twin of the kernel's tiling), or 'pallas' (the kernel;
     also selected by use_pallas=True).  All three implement identical
     per-query top-nprobe semantics."""
-    Q, _ = queries.shape
     nprobe = max(1, min(nprobe, index.n_clusters))
     k = min(k, index.n_rows, nprobe * index.list_size)
     backend = backend or ("pallas" if use_pallas else "host")
@@ -300,17 +608,8 @@ def ivf_topk(queries, index: IVFIndex, k: int,
         return _score_pairs_host(np.asarray(queries, np.float32), q_probe,
                                  index, k)
 
-    # sort queries by primary cluster: tiles become probe-coherent, so the
-    # static slot width S stays near nprobe instead of block_q * nprobe
-    # (build_ivf_index orders cluster ids along the centroids' top principal
-    # direction, so nearby ids are nearby clusters)
-    order = np.argsort(q_probe[:, 0], kind="stable")
-    inv_order = np.argsort(order, kind="stable")
-    bq = min(block_q, Q)
-    pq = (-Q) % bq
-    qp_sorted = np.pad(q_probe[order], ((0, pq), (0, 0)), constant_values=-1)
-    q_sorted = jnp.pad(queries[jnp.asarray(order)], ((0, pq), (0, 0)))
-    tile_probe, tile_valid = plan_tile_probes(qp_sorted, bq)
+    q_sorted, qp_sorted, tile_probe, tile_valid, inv_order, bq = \
+        _sorted_tile_plan(queries, q_probe, block_q)
 
     if backend == "pallas":
         scores, idx = ivf_topk_pallas(
@@ -327,3 +626,55 @@ def ivf_topk(queries, index: IVFIndex, k: int,
         raise ValueError(f"unknown backend {backend!r}")
     inv_order = jnp.asarray(inv_order)
     return scores[inv_order], idx[inv_order]
+
+
+def ivfpq_topk(queries, index: IVFPQIndex, k: int,
+               nprobe: int = DEFAULT_NPROBE, rerank: int = DEFAULT_RERANK, *,
+               use_pallas: bool = False, backend: str | None = None,
+               interpret: bool = True, block_q: int = 32):
+    """Two-stage IVF-PQ search.  queries (Q, D) L2-normalized; same output
+    contract as `ivf_topk` (-inf / -1 beyond the valid candidates).
+
+    Stage 1 scores the probed lists' PACKED codes by ADC (backend 'host' /
+    'tiles' / 'pallas', mirroring `ivf_topk`) into a shortlist of
+    ``rerank * k`` candidates; stage 2 re-scores exactly those rows from the
+    raw cold tier and keeps the top k, which restores near-exact recall at
+    a per-query cost of one small (kk, D) gather.  ``rerank=0`` skips stage
+    2 and returns raw ADC scores (cheapest, recall bounded by quantization
+    error); ``rerank=1`` re-scores just the top-k shortlist — exact scores
+    re-sorted among themselves, so the candidate SET still comes from ADC
+    but the returned ordering is exact."""
+    nprobe = max(1, min(nprobe, index.n_clusters))
+    k = min(k, index.n_rows, nprobe * index.list_size)
+    kk = min(max(rerank, 1) * k, index.n_rows, nprobe * index.list_size)
+    backend = backend or ("pallas" if use_pallas else "host")
+    queries = jnp.asarray(queries)
+    q_probe = np.asarray(ivf_probe(queries, index.centroids, nprobe))
+
+    if backend == "host":
+        scores, idx = _adc_pairs_host(np.asarray(queries, np.float32),
+                                      q_probe, index, kk)
+    elif backend in ("tiles", "pallas"):
+        q_sorted, qp_sorted, tile_probe, tile_valid, inv_order, bq = \
+            _sorted_tile_plan(queries, q_probe, block_q)
+        if backend == "pallas":
+            scores, idx = ivfpq_adc_pallas(
+                q_sorted, index.codes_cm, index.ids_cm, index.inv_cm,
+                index.anchors, index.cb_mat, jnp.asarray(qp_sorted),
+                jnp.asarray(tile_probe), jnp.asarray(tile_valid), kk,
+                m=index.m, nbits=index.nbits, interpret=interpret)
+            scores = jnp.where(idx >= 0, scores, -jnp.inf)
+        else:
+            scores, idx = _adc_tiles(
+                q_sorted, jnp.asarray(qp_sorted), jnp.asarray(tile_probe),
+                jnp.asarray(tile_valid), index.codes_cm, index.ids_cm,
+                index.inv_cm, index.anchors, index.codebooks, kk, bq,
+                index.m, index.nbits)
+        inv_order = jnp.asarray(inv_order)
+        scores, idx = scores[inv_order], idx[inv_order]
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    if not rerank:
+        return scores[:, :k], idx[:, :k]
+    return _rerank_exact(queries, index.sup_flat, idx, k)

@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: asymmetric-distance computation (ADC) over packed
+IVF-PQ lists.
+
+Grid (Q/BQ, S) — the same query-tile x probe-slot schedule as the raw IVF
+kernel (`kernel.py`), with the same scalar-prefetched slot lists so the
+BlockSpec index maps DMA exactly the probed clusters' blocks.  What changes
+is WHAT gets DMA'd per slot: an (L, MB) packed uint8 code block (MB =
+m*nbits/8 bytes/row) instead of an (L, D) float32 row block — the ~16-32x
+cut in per-probe HBM traffic that is the whole point of the PQ tier.
+
+Per query tile the kernel builds the ADC lookup table ONCE into VMEM
+scratch at slot 0:
+
+    lut = q @ cb_mat.T          # (BQ, m*K); cb_mat is the block-diagonal
+                                # (m*K, D) codebook expansion (pq.py), so
+                                # the table is one MXU matmul — no reshapes
+
+and scores each slot's codes by expanding them into an m-hot indicator
+matrix and contracting it against the table on the MXU:
+
+    onehot[l, j*K + c] = 1  iff  code_jl == c      # (L, m*K)
+    sims = lut @ onehot.T + (q @ anchor_c)         # (BQ, L)
+
+The m-hot expansion trades FLOPs (m*K MACs/row vs m gathers) for
+Mosaic-safety — only compares, selects, and matmuls, no dynamic VMEM
+gathers — and the MXU absorbs it: the kernel stays DMA-bound, which is the
+dimension PQ improves.  Masking, the exact stored inverse norms, and the
+running (BQ, K) top-k merge are identical to the raw IVF kernel, so the
+shortlist contract (-1 ids / NEG scores in empty slots) is too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..knn_topk.kernel import NEG, merge_topk
+
+
+def _adc_kernel(probe_ref, valid_ref, q_ref, qp_ref, cb_ref, codes_ref,
+                ids_ref, inv_ref, anch_ref, out_s_ref, out_i_ref, lut_ref, *,
+                k: int, m: int, nbits: int):
+    i = pl.program_id(0)
+    p = pl.program_id(1)
+    kk = 2 ** nbits
+
+    @pl.when(p == 0)
+    def _init():
+        out_s_ref[...] = jnp.full_like(out_s_ref, NEG)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+        # the per-tile ADC table, built once per query tile and reused by
+        # every probe slot: one (BQ, D) x (D, m*K) matmul
+        q = q_ref[...].astype(jnp.float32)
+        lut_ref[...] = jax.lax.dot_general(
+            q, cb_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(valid_ref[i, p] != 0)
+    def _merge():
+        cid = probe_ref[i, p]
+        q = q_ref[...].astype(jnp.float32)                   # (BQ, D)
+        codes = codes_ref[0].astype(jnp.int32)               # (L, MB)
+        ids = ids_ref[...]                                   # (1, L)
+        l = codes.shape[0]
+
+        # m-hot indicator of the packed codes, accumulated subspace by
+        # subspace (static python loop — m is a compile-time constant):
+        # column j*K + c is 1 exactly when the row's j-th code equals c
+        col = jax.lax.broadcasted_iota(jnp.int32, (l, m * kk), 1)
+        onehot = jnp.zeros((l, m * kk), jnp.float32)
+        for j in range(m):
+            if nbits == 8:
+                cj = codes[:, j]
+            else:
+                byte = codes[:, j // 2]
+                cj = (byte & 0xF) if j % 2 == 0 else ((byte >> 4) & 0xF)
+            target = cj[:, None] + j * kk                    # (L, 1)
+            onehot = onehot + jnp.where(col == target, 1.0, 0.0)
+
+        sims = jax.lax.dot_general(lut_ref[...], onehot,
+                                   (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        aq = jax.lax.dot_general(q, anch_ref[...],           # (BQ, 1)
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        sims = (sims + aq) * inv_ref[...]                    # (BQ, L)
+
+        probed = jnp.any(qp_ref[...] == cid, axis=1)         # (BQ,)
+        ok = probed[:, None] & (ids >= 0)                    # (BQ, L)
+        sims = jnp.where(ok, sims, NEG)
+        # masked candidates must not leak their row id (same contract as the
+        # raw IVF kernel): empty merge picks carry -1
+        ids_b = jnp.where(ok, jnp.broadcast_to(ids, sims.shape), -1)
+
+        cand_s = jnp.concatenate([out_s_ref[...], sims], axis=1)
+        cand_i = jnp.concatenate([out_i_ref[...], ids_b], axis=1)
+        acc_s, acc_i = merge_topk(cand_s, cand_i, k)
+        out_s_ref[...] = acc_s
+        out_i_ref[...] = acc_i
+
+
+def ivfpq_adc_pallas(queries, codes_cm, ids_cm, inv_cm, anchors, cb_mat,
+                     q_probe, tile_probe, tile_valid, k: int, *, m: int,
+                     nbits: int, interpret: bool = True):
+    """queries (Q, D) L2-normalized, Q a multiple of the tile size implied
+    by tile_probe; codes_cm (C, L, MB) packed uint8; ids_cm/inv_cm (C, L);
+    anchors (C, D) raw-space list means; cb_mat (m*2^nbits, D) block-diag
+    codebook expansion; q_probe/tile_probe/tile_valid as in
+    `ivf_topk_pallas`.  Returns the ADC shortlist (scores (Q, k),
+    indices (Q, k)) — original row ids, -1 / NEG in empty slots."""
+    Q, D = queries.shape
+    C, L, MB = codes_cm.shape
+    T, S = tile_probe.shape
+    P = q_probe.shape[1]
+    MK = m * 2 ** nbits
+    assert Q % T == 0, (Q, T)
+    assert cb_mat.shape == (MK, D), (cb_mat.shape, MK, D)
+    bq = Q // T
+
+    kern = functools.partial(_adc_kernel, k=k, m=m, nbits=nbits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, S),
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i, p, probe, valid: (i, 0)),
+            pl.BlockSpec((bq, P), lambda i, p, probe, valid: (i, 0)),
+            pl.BlockSpec((MK, D), lambda i, p, probe, valid: (0, 0)),
+            pl.BlockSpec((1, L, MB),
+                         lambda i, p, probe, valid: (probe[i, p], 0, 0)),
+            pl.BlockSpec((1, L),
+                         lambda i, p, probe, valid: (probe[i, p], 0)),
+            pl.BlockSpec((1, L),
+                         lambda i, p, probe, valid: (probe[i, p], 0)),
+            pl.BlockSpec((1, D),
+                         lambda i, p, probe, valid: (probe[i, p], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, p, probe, valid: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, p, probe, valid: (i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, MK), jnp.float32)],
+    )
+    out_s, out_i = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_probe, tile_valid, queries, q_probe, cb_mat, codes_cm, ids_cm,
+      inv_cm, anchors)
+    return out_s, out_i

@@ -14,6 +14,11 @@ Semantics (shared with the Pallas kernel in `kernel.py`):
 
 Empty output slots (fewer than k valid candidates) carry score -inf and
 index -1.
+
+``ivfpq_adc_reference`` is the matching oracle for the PQ tier: it scores
+probed lists against full row RECONSTRUCTIONS (anchor + decoded residual),
+which equals the production backends' LUT-gather ADC arithmetic by
+linearity of the dot product while sharing no code with them.
 """
 from __future__ import annotations
 
@@ -31,6 +36,46 @@ def ivf_probe(queries, centroids, nprobe: int):
                              preferred_element_type=jnp.float32)
     _, probe = jax.lax.top_k(cs, min(nprobe, centroids.shape[0]))
     return probe.astype(jnp.int32)
+
+
+def ivfpq_adc_reference(queries, centroids, anchors, codebooks, codes_cm,
+                        ids_cm, inv_cm, k: int, nprobe: int, m: int,
+                        nbits: int):
+    """Decode-based ADC oracle: reconstruct every list row as
+    ``anchor + concat_j codebook[j, code_j]`` and score the probed lists
+    densely against the reconstructions, times the EXACT stored inverse
+    norms.  By linearity of the dot product this equals the LUT-gather ADC
+    score term for term, so every production backend (host pairs, jitted
+    tiles, Pallas kernel) can be checked against an implementation that
+    shares no code with them.  Output contract matches `ivf_topk_reference`:
+    -inf / -1 beyond the valid candidates."""
+    from .pq import unpack_codes_jnp
+
+    Q, _ = queries.shape
+    C, L, _ = codes_cm.shape
+    nprobe = min(nprobe, C)
+    q = queries.astype(jnp.float32)
+    probe = ivf_probe(q, centroids, nprobe)                 # (Q, P)
+
+    codes = unpack_codes_jnp(codes_cm, m, nbits)            # (C, L, m)
+    parts = jnp.stack([codebooks[j, codes[:, :, j]] for j in range(m)],
+                      axis=2)                               # (C, L, m, dsub)
+    recon = anchors[:, None, :] + parts.reshape(C, L, -1)   # (C, L, D)
+
+    lists = jnp.take(recon, probe, axis=0)                  # (Q, P, L, D)
+    ids = jnp.take(ids_cm, probe, axis=0)                   # (Q, P, L)
+    inv = jnp.take(inv_cm, probe, axis=0)                   # (Q, P, L)
+    sims = jnp.einsum("qd,qpld->qpl", q, lists,
+                      preferred_element_type=jnp.float32) * inv
+    sims = jnp.where(ids >= 0, sims, -jnp.inf)
+
+    cand_s = sims.reshape(Q, nprobe * L)
+    cand_i = ids.reshape(Q, nprobe * L)
+    k = min(k, cand_s.shape[1])
+    scores, pos = jax.lax.top_k(cand_s, k)
+    idx = jnp.take_along_axis(cand_i, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores, idx.astype(jnp.int32)
 
 
 def ivf_topk_reference(queries, centroids, sup_cm, ids_cm, k: int,

@@ -19,8 +19,12 @@ share one jitted batched utility kernel (`_route_batch`).
 
 Confidence-based fallback uses an optional protocol — any router exposing
 ``confidence(X) -> (kth_sim, agreement)`` (§8 diagnostics) participates; no
-type checks.  Router/engine model-count mismatches raise at construction
-instead of silently aliasing choices onto the engine list.
+type checks.  Routers that additionally expose ``predict_with_confidence``
+(kNN) serve utility AND confidence from ONE retrieval — without it, every
+confidence-fallback route would pay for the neighbour search twice, which
+on a kNN router is the entire per-request cost.  Router/engine model-count
+mismatches raise at construction instead of silently aliasing choices onto
+the engine list.
 """
 from __future__ import annotations
 
@@ -61,10 +65,12 @@ def knn_service(ds: RoutingDataset, engines: Dict[str, "ServingEngine"],
                 seed: int = 0, fallback_model: Optional[str] = None,
                 confidence_floor: float = 0.02,
                 **router_kw) -> "RouterService":
-    """Fit a kNN router on ``ds`` (building the IVF coarse quantizer when
-    ``index='ivf'``) and wrap it in a RouterService over ``engines``.
-    ``router_kw`` are KNNRouter constructor kwargs (weights, nprobe, ...)."""
-    spec = RouterSpec("knn", k=k, ivf=(index == "ivf"), kwargs=router_kw)
+    """Fit a kNN router on ``ds`` (building the IVF coarse quantizer — and
+    the PQ codebooks when ``index='ivfpq'``) and wrap it in a RouterService
+    over ``engines``.  ``router_kw`` are KNNRouter constructor kwargs
+    (weights, nprobe, m, nbits, rerank, ...)."""
+    spec = RouterSpec("knn", k=k, ivf=index in ("ivf", "ivfpq"),
+                      kwargs=router_kw, pq=(index == "ivfpq"))
     return RouterService(spec, engines, ds=ds, lam=lam, seed=seed,
                          fallback_model=fallback_model,
                          confidence_floor=confidence_floor)
@@ -90,6 +96,10 @@ class RouterService:
         self.engines = engines
         self.model_names = self._validate_engines(router, engines)
         self.default_lam = router.default_lam if lam is None else float(lam)
+        if fallback_model is not None and fallback_model not in engines:
+            raise ValueError(
+                f"fallback_model {fallback_model!r} has no serving engine "
+                f"(engines: {list(engines)})")
         self.fallback_model = fallback_model
         self.confidence_floor = confidence_floor
         self._uid = 0
@@ -124,7 +134,8 @@ class RouterService:
 
     @property
     def retrieval_backend(self) -> str:
-        """'exact' / 'ivf' for kNN routers, 'n/a' for parametric ones."""
+        """'exact' / 'ivf' / 'ivfpq' for kNN routers, 'n/a' for parametric
+        ones."""
         return getattr(self.router, "index", "n/a")
 
     # ---- routing ----
@@ -140,38 +151,59 @@ class RouterService:
                              f"shape {arr.shape}")
         return arr
 
-    def _decide(self, emb: np.ndarray, lam) -> tuple:
-        s_hat, c_hat = self.router.predict_utility(emb)
+    def _choose(self, s_hat: np.ndarray, c_hat: np.ndarray, lam,
+                n: int) -> tuple:
+        """Shared decision core: validate arity, resolve per-request lambdas,
+        run the jitted batched utility argmax."""
         if s_hat.shape[1] != len(self.model_names):
             raise ValueError(
                 f"router emitted {s_hat.shape[1]} model columns, expected "
                 f"{len(self.model_names)} ({self.model_names})")
-        lam_r = self._resolve_lam(lam, len(emb))
+        lam_r = self._resolve_lam(lam, n)
         choice, _ = _route_batch(jnp.asarray(s_hat), jnp.asarray(c_hat),
                                  jnp.asarray(lam_r))
-        return np.asarray(choice), s_hat, c_hat, lam_r
+        return np.asarray(choice), lam_r
+
+    def _decide(self, emb: np.ndarray, lam) -> tuple:
+        s_hat, c_hat = self.router.predict_utility(emb)
+        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
+        return choice, s_hat, c_hat, lam_r
 
     def route_embeddings(self, emb: np.ndarray, lam=None) -> np.ndarray:
         """Per-request lambda routing over raw embeddings -> model indices."""
         return self._decide(emb, lam)[0]
 
-    def submit_texts(self, texts: Sequence[str], prompts_tokens=None,
-                     max_new_tokens: int = 8, lam=None) -> List[RoutedResult]:
-        emb = encoder.embed_texts(list(texts))
-        choice, s_hat, c_hat, lam_r = self._decide(emb, lam)
-
-        conf = None
+    def _predict_for_serving(self, emb: np.ndarray):
+        """(s_hat, c_hat, agreement-or-None) with ONE retrieval pass.
+        ``predict_with_confidence`` fuses utility + diagnostics over a single
+        neighbour search; routers exposing only ``confidence`` pay a second
+        search; routers exposing neither serve without fallback."""
+        fused = getattr(self.router, "predict_with_confidence", None)
+        if callable(fused):
+            s_hat, c_hat, _, agree = fused(emb)
+            return s_hat, c_hat, agree
+        s_hat, c_hat = self.router.predict_utility(emb)
         conf_fn = getattr(self.router, "confidence", None)
         if callable(conf_fn):
             _, agree = conf_fn(emb)
-            conf = agree
+            return s_hat, c_hat, agree
+        return s_hat, c_hat, None
+
+    def submit_texts(self, texts: Sequence[str], prompts_tokens=None,
+                     max_new_tokens: int = 8, lam=None) -> List[RoutedResult]:
+        emb = encoder.embed_texts(list(texts))
+        s_hat, c_hat, conf = self._predict_for_serving(emb)
+        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
 
         results = []
         for i, text in enumerate(texts):
-            m = self.model_names[int(choice[i])]
+            mi = int(choice[i])
             if (conf is not None and self.fallback_model
                     and conf[i] < self.confidence_floor):
-                m = self.fallback_model
+                # report the FALLBACK model's predicted score/cost too —
+                # the log must attribute predictions to the model served
+                mi = self.model_names.index(self.fallback_model)
+            m = self.model_names[mi]
             toks = (prompts_tokens[i] if prompts_tokens is not None
                     else encoder.hash_tokenize(text)[:16])
             toks = np.asarray(toks, np.int32)
@@ -181,8 +213,8 @@ class RouterService:
             self._uid += 1
             res = RoutedResult(
                 uid=req.uid, model=m, request=req,
-                predicted_score=float(s_hat[i, choice[i]]),
-                predicted_cost=float(c_hat[i, choice[i]]),
+                predicted_score=float(s_hat[i, mi]),
+                predicted_cost=float(c_hat[i, mi]),
                 lam=float(lam_r[i]),
                 confidence=float(conf[i]) if conf is not None else None)
             results.append(res)

@@ -182,6 +182,40 @@ def test_sharded_ivf_matches_single_device():
 
 
 @pytest.mark.slow
+def test_sharded_ivfpq_matches_single_device():
+    """Cluster-sharded IVF-PQ (packed code lists sharded, codebooks/anchors
+    replicated, global shortlist re-ranked outside the shard_map) must
+    reproduce the single-device two-stage result exactly: identical probe
+    sets and ADC tables on every shard make the merged shortlist identical,
+    and stage 2 is the same exact re-rank."""
+    res = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_debug_mesh
+        from repro.core.sharded_knn import sharded_ivfpq_topk
+        from repro.kernels.knn_ivf.ops import build_ivfpq_index, ivfpq_topk
+        mesh = make_debug_mesh(2, 4)
+        key = jax.random.PRNGKey(0)
+        centers = jax.random.normal(key, (8, 32)) * 3
+        s = (centers[jax.random.randint(jax.random.fold_in(key, 1),
+                                        (4000,), 0, 8)]
+             + jax.random.normal(jax.random.fold_in(key, 2), (4000, 32)))
+        q = (centers[jax.random.randint(jax.random.fold_in(key, 3),
+                                        (32,), 0, 8)]
+             + jax.random.normal(jax.random.fold_in(key, 4), (32, 32)))
+        q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+        index = build_ivfpq_index(np.asarray(s), seed=0)
+        sc_loc, ix_loc = ivfpq_topk(q, index, 10, nprobe=8, rerank=4,
+                                    backend="tiles")
+        sc_sh, ix_sh = sharded_ivfpq_topk(q, index, 10, mesh, nprobe=8,
+                                          rerank=4)
+        ok_sc = bool(jnp.allclose(sc_sh, sc_loc, rtol=1e-5, atol=1e-5))
+        ok_ix = float(jnp.mean((ix_sh == ix_loc).astype(jnp.float32)))
+        print(json.dumps({"ok_sc": ok_sc, "ok_ix": ok_ix}))
+    """)
+    assert res["ok_sc"] and res["ok_ix"] > 0.99
+
+
+@pytest.mark.slow
 def test_sharded_knn_klocal_recall():
     """Truncated per-shard merge (k_local < k): recall@k stays ~1 with the
     collective cut by k/k_local (binomial-occupancy argument)."""

@@ -32,6 +32,11 @@ def ds():
     ("knn10@use_pallas=true", RouterSpec("knn", 10,
                                          kwargs={"use_pallas": True})),
     ("linucb@alpha=0.25", RouterSpec("linucb", kwargs={"alpha": 0.25})),
+    ("knn100-ivfpq", RouterSpec("knn", k=100, ivf=True, pq=True)),
+    ("knn100-ivfpq@m=16,nbits=8", RouterSpec("knn", 100, True,
+                                             {"m": 16, "nbits": 8}, pq=True)),
+    ("knn10-ivfpq@rerank=2", RouterSpec("knn", 10, True, {"rerank": 2},
+                                        pq=True)),
 ])
 def test_parse_format_round_trip(spec_str, expect):
     spec = parse_spec(spec_str)
@@ -43,11 +48,15 @@ def test_parse_format_round_trip(spec_str, expect):
 def test_legacy_underscore_ivf_alias():
     assert parse_spec("knn10_ivf") == RouterSpec("knn", k=10, ivf=True)
     assert format_spec(parse_spec("knn100_ivf")) == "knn100-ivf"
+    assert parse_spec("knn10_ivfpq") == RouterSpec("knn", k=10, ivf=True,
+                                                   pq=True)
+    assert format_spec(parse_spec("knn100_ivfpq")) == "knn100-ivfpq"
 
 
 @pytest.mark.parametrize("bad", [
     "", "bogus", "bogus10", "linear-ivf", "mlp7", "knn10@", "knn10@k",
-    "knn10@nope=1", "knn10@k=", "10knn",
+    "knn10@nope=1", "knn10@k=", "10knn", "linear-ivfpq", "knn10-ivfp",
+    "knn10-pq",
 ])
 def test_invalid_specs_raise(bad):
     with pytest.raises(ValueError):
@@ -63,7 +72,8 @@ def test_registry_and_paper_order_derived():
     assert PAPER_ORDER == ["knn10", "knn100", "linear", "linear_mf", "mlp",
                            "mlp_mf", "graph10", "graph100", "attn10",
                            "attn100", "dattn10", "dattn100"]
-    for name in PAPER_ORDER + ["knn10-ivf", "knn100-ivf", "linucb"]:
+    for name in PAPER_ORDER + ["knn10-ivf", "knn100-ivf", "knn10-ivfpq",
+                               "knn100-ivfpq", "linucb"]:
         assert name in REGISTRY
         assert callable(REGISTRY[name])
     # every registry name parses back to itself (canonical forms only)
@@ -94,8 +104,9 @@ def test_select_before_fit_selection_is_descriptive(ds):
 # artifacts: save -> load parity for every registered family
 # ---------------------------------------------------------------------------
 
-ALL_FAMILY_SPECS = ["knn10", "knn100-ivf", "linear", "linear_mf", "mlp",
-                    "mlp_mf", "graph10", "attn10", "dattn10", "linucb"]
+ALL_FAMILY_SPECS = ["knn10", "knn100-ivf", "knn100-ivfpq", "linear",
+                    "linear_mf", "mlp", "mlp_mf", "graph10", "attn10",
+                    "dattn10", "linucb"]
 
 
 def _small(spec):
