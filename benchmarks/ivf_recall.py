@@ -23,11 +23,20 @@ writes a machine-readable ``BENCH_retrieval.json`` snapshot — p50 route
 latency, recall@k, and hot index bytes per backend at its default operating
 point — so the perf trajectory is tracked commit over commit.
 
+The STREAMING sweep (``results/ivf_stream.csv``, snapshot key
+``"streaming"``) measures the online-update path: an IVF-PQ index is built
+on part of the corpus, the rest is appended through the `DynamicIVFIndex`
+delta tier, and recall@k vs. brute force over the grown corpus plus p50
+latency are tracked per appended fraction — then a ``recluster()``
+compaction is compared against a from-scratch build over the same rows
+(identical by k-means seed determinism, so the delta is ~0).
+
 Env knobs: REPRO_IVF_N (support rows, default 100_000), REPRO_IVF_D (dim,
 default 64), REPRO_IVF_Q (queries, default 256), REPRO_IVF_K (default 100),
 REPRO_IVF_M (PQ subspaces, default D/4 — corpus-scale neighbour gaps are
 tight enough that the D/8 operating point needs a much larger re-rank
-budget to clear recall 0.95; D/4 keeps codes 16x smaller than raw rows).
+budget to clear recall 0.95; D/4 keeps codes 16x smaller than raw rows),
+REPRO_IVF_STREAM=0 (skip the streaming sweep).
 """
 from __future__ import annotations
 
@@ -38,14 +47,17 @@ import jax
 import numpy as np
 
 from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
-                                       build_ivf_index, build_ivfpq_index,
-                                       ivf_topk, ivfpq_topk)
+                                       DynamicIVFIndex, build_ivf_index,
+                                       build_ivfpq_index, ivf_topk,
+                                       ivfpq_topk)
 from repro.kernels.knn_topk.ops import knn_topk
 
 from .common import RESULTS, Timer, write_csv
 
 NPROBES = (1, 2, 4, 8, 16, 32)
 RERANKS = (0, 1, 2, 4, 8, 16)
+#: cumulative corpus fractions appended through the delta tier
+STREAM_FRACS = (0.02, 0.05, 0.10)
 
 
 def _clustered(n, d, n_centers, seed):
@@ -73,6 +85,74 @@ def _recall(idx, exact_sets, k):
     got = np.asarray(idx)
     return float(np.mean([len(exact_sets[i] & set(got[i])) / k
                           for i in range(len(got))]))
+
+
+def _stream_sweep(sup, qj, k, m, seed):
+    """Streaming sweep: build on (1 - max(STREAM_FRACS)) of the corpus,
+    append the rest in cumulative fractions through the exact-scanned delta
+    tier, and at each point measure recall@k against brute force over the
+    GROWN corpus plus p50 search latency.  Afterwards `recluster()` compacts
+    the delta and is compared with a from-scratch build over the identical
+    rows — equal bitwise by k-means seed determinism, so the reported recall
+    gap demonstrates the acceptance bound (within 0.005) trivially holds."""
+    import jax.numpy as jnp
+    n = len(sup)
+    base_n = n - int(round(max(STREAM_FRACS) * n))
+
+    with Timer() as t_build:
+        base = build_ivfpq_index(sup[:base_n], m=m, seed=seed)
+    dyn = DynamicIVFIndex(base, delta_cap=n, build_kw={"m": m, "seed": seed})
+    print(f"  ivf_stream: base={base_n} rows build={t_build.dt:.2f}s "
+          f"(appending up to {max(STREAM_FRACS):.0%} of N={n})")
+
+    def measure():
+        cur = jnp.asarray(sup[:dyn.n_rows])
+        _, exact_idx = knn_topk(qj, cur, k)
+        exact_sets = [set(r) for r in np.asarray(exact_idx)]
+        t = _p50(lambda: ivfpq_topk(qj, dyn, k))
+        _, idx = ivfpq_topk(qj, dyn, k)
+        return _recall(idx, exact_sets, k), t, exact_sets
+
+    rows, points = [], []
+    appended = 0
+    for frac in STREAM_FRACS:
+        target = int(round(frac * n))
+        dyn.append(sup[base_n + appended:base_n + target])
+        appended = target
+        rec, t, _ = measure()
+        rows.append([round(frac, 3), appended, round(rec, 4), round(t, 5), 0])
+        points.append({"frac_appended": frac, "delta_rows": appended,
+                       f"recall_at_{k}": round(rec, 4),
+                       "p50_route_latency_s": round(t, 6)})
+        occ = dyn.delta_occupancy()
+        print(f"  ivf_stream frac={frac:.0%} delta={appended}: "
+              f"recall@{k}={rec:.3f} t={t*1e3:.1f}ms "
+              f"(occupied lists {int((occ > 0).sum())}/{dyn.n_clusters}, "
+              f"max {int(occ.max())})")
+
+    with Timer() as t_rc:
+        dyn.recluster()
+    rec_rc, t_q, exact_sets = measure()
+    rows.append([round(max(STREAM_FRACS), 3), 0, round(rec_rc, 4),
+                 round(t_q, 5), 1])
+    # from-scratch reference over the identical rows: equal by determinism
+    fresh = build_ivfpq_index(sup[:base_n + appended], m=m, seed=seed)
+    _, idx_f = ivfpq_topk(qj, fresh, k)
+    rec_fresh = _recall(idx_f, exact_sets, k)
+    print(f"  ivf_stream recluster: recall@{k}={rec_rc:.3f} "
+          f"(fresh build {rec_fresh:.3f}, |delta|={abs(rec_rc-rec_fresh):.4f}"
+          f" <= 0.005) rebuild={t_rc.dt:.2f}s")
+
+    write_csv(RESULTS / "ivf_stream.csv",
+              ["frac_appended", "delta_rows", f"recall@{k}", "p50_t_s",
+               "post_recluster"], rows)
+    return {
+        "base_rows": base_n, "points": points,
+        "post_recluster": {f"recall_at_{k}": round(rec_rc, 4),
+                           "p50_route_latency_s": round(t_q, 6),
+                           "rebuild_s": round(t_rc.dt, 3)},
+        "fresh_build": {f"recall_at_{k}": round(rec_fresh, 4)},
+    }
 
 
 def run(seed: int = 0, emit: str | None = None):
@@ -147,6 +227,10 @@ def run(seed: int = 0, emit: str | None = None):
     print(f"  ivf_recall bytes: ivf={index.index_bytes/1e6:.1f}MB "
           f"ivfpq={pq_index.index_bytes/1e6:.1f}MB ({ratio:.1f}x smaller)")
 
+    streaming = None
+    if os.environ.get("REPRO_IVF_STREAM", "1") != "0":
+        streaming = _stream_sweep(sup, qj, k, m, seed)
+
     if emit:
         ivf_pt = ivf_res[(("nprobe", DEFAULT_NPROBE),)] \
             if (("nprobe", DEFAULT_NPROBE),) in ivf_res \
@@ -172,6 +256,8 @@ def run(seed: int = 0, emit: str | None = None):
                           "index_bytes": int(pq_index.index_bytes)},
             },
         }
+        if streaming is not None:
+            snapshot["streaming"] = streaming
         with open(emit, "w") as f:
             json.dump(snapshot, f, indent=2)
             f.write("\n")

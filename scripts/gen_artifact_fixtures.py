@@ -1,0 +1,64 @@
+"""Regenerate the pinned legacy-artifact fixtures under tests/fixtures/.
+
+The fixtures freeze what a format_version 1 (raw IVF index, pre-PQ) and a
+format_version 2 (IVF-PQ, pre-streaming) artifact looked like on disk, so
+`load_router` stays backward compatible as FORMAT_VERSION moves on: the
+compat test loads them straight from the repo, no re-generation at test
+time.  Run this ONLY to refresh the fixtures after an intentional change to
+what the historical formats contained (then review the diff carefully —
+rewriting history by accident is exactly what the pinned copies guard
+against).
+
+    PYTHONPATH=src python scripts/gen_artifact_fixtures.py
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.dataset import RoutingDataset
+from repro.core.routers import make_router, save_router
+
+FIXTURES = Path(__file__).resolve().parent.parent / "tests" / "fixtures"
+
+#: constructor keys each historical version knew about (everything newer is
+#: stripped from the manifest config so the fixture matches what that
+#: version's save_router actually wrote)
+_V1_CONFIG_KEYS = ("k", "weights", "use_pallas", "temperature", "index",
+                   "n_clusters", "nprobe")
+_V2_CONFIG_KEYS = _V1_CONFIG_KEYS + ("m", "nbits", "rerank")
+
+
+def _tiny_ds():
+    rng = np.random.default_rng(17)
+    n, d, m = 24, 8, 2
+    return RoutingDataset(
+        "fixture", rng.normal(size=(n, d)).astype(np.float32),
+        rng.uniform(0.2, 1.0, (n, m)).astype(np.float32),
+        rng.uniform(0.001, 0.01, (n, m)).astype(np.float32),
+        ["model-a", "model-b"])
+
+
+def _pin(path: Path, version: int, config_keys):
+    manifest = json.loads((path / "manifest.json").read_text())
+    manifest["format_version"] = version
+    manifest["config"] = {k: v for k, v in manifest["config"].items()
+                          if k in config_keys}
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+
+
+def main():
+    ds = _tiny_ds()
+    v1 = save_router(make_router("knn2-ivf@n_clusters=4").fit(ds),
+                     FIXTURES / "artifact_v1")
+    _pin(v1, 1, _V1_CONFIG_KEYS)
+    v2 = save_router(make_router("knn2-ivfpq@n_clusters=4,m=2").fit(ds),
+                     FIXTURES / "artifact_v2")
+    _pin(v2, 2, _V2_CONFIG_KEYS)
+    for p in (v1, v2):
+        size = sum(f.stat().st_size for f in p.iterdir())
+        print(f"  {p.relative_to(FIXTURES.parent.parent)}: {size} bytes")
+
+
+if __name__ == "__main__":
+    main()

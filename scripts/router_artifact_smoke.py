@@ -1,7 +1,9 @@
 """CI gate for artifact backward-compat: fit, save, reload, and smoke-serve
-``knn10``, ``linear``, and the product-quantized ``knn100-ivfpq`` (codebooks
-+ packed codes + cold raw rows round-tripping through the format_version-2
-manifest) end-to-end through the RoutingPipeline.
+``knn10``, ``linear``, the product-quantized ``knn100-ivfpq``, and a
+streaming ``knn10-ivf@online=1`` carrying a MID-STREAM delta tier (pending
+appended rows + re-cluster counters round-tripping through the
+format_version-3 manifest) end-to-end through the RoutingPipeline; the
+reloaded online router must keep absorbing ``observe`` feedback.
 
   PYTHONPATH=src python scripts/router_artifact_smoke.py
 """
@@ -20,7 +22,8 @@ from repro.serving.router_service import RouterService
 from repro.core.dataset import RoutingDataset
 
 POOL = ["qwen3-4b", "mamba2-370m"]
-SPECS = ["knn10", "linear", "knn100-ivfpq@m=16,nbits=8"]
+SPECS = ["knn10", "linear", "knn100-ivfpq@m=16,nbits=8",
+         "knn10-ivf@delta_cap=64,online=1"]
 
 
 def build_support(n=80, seed=0):
@@ -42,6 +45,12 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as td:
         for spec in SPECS:
             pipe = RoutingPipeline(spec).fit(ds)
+            online = getattr(pipe.router, "online", False)
+            if online:      # persist mid-stream: pending delta rows included
+                rng = np.random.default_rng(1)
+                pipe.router.partial_fit(
+                    rng.normal(size=(5, ds.dim)).astype(np.float32),
+                    rng.uniform(0, 1, (5, len(POOL))).astype(np.float32))
             s1, c1 = pipe.router.predict_utility(X)
             path = pipe.save(f"{td}/{spec}")
             svc = RouterService.from_artifact(path, engines,
@@ -56,6 +65,16 @@ def main() -> int:
             if not all(r.request.done for r in results):
                 print(f"FAIL {spec}: served requests did not complete")
                 return 1
+            if online:      # the reloaded stream must keep flowing
+                before = svc.router.support_size
+                if svc.router._ivf.delta_rows != 5:
+                    print(f"FAIL {spec}: delta tier lost in the round-trip")
+                    return 1
+                size = svc.observe(["post-reload feedback"],
+                                   np.array([[0.9, 0.1]], np.float32))
+                if size != before + 1:
+                    print(f"FAIL {spec}: observe() did not grow the support")
+                    return 1
             print(f"ok {spec}: saved -> reloaded -> served "
                   f"({[r.model for r in results]})")
     print("router artifact smoke: PASS")

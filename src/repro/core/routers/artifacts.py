@@ -13,7 +13,11 @@ kNN IVF index serializes its cluster-major layout (centroids, padded lists,
 ids, inverse norms) so a server boots straight into approximate retrieval;
 the IVF-PQ variant serializes anchors, packed uint8 codes, PQ codebooks,
 and the flat cold raw rows instead (the two field sets are disjoint, which
-is how ``restore_state`` tells them apart).
+is how ``restore_state`` tells them apart).  A streaming `DynamicIVFIndex`
+nests its frozen base under a ``base/`` prefix and adds the pending delta
+rows, the append/re-cluster counters, and the re-build parameters — so a
+reloaded server resumes mid-stream, delta tier intact, and its next
+re-cluster replays the original build seed.
 
 ``Router.state_dict()`` / ``load_state_dict()`` are driven by each family's
 ``state_attrs`` declaration; ``save_router`` / ``load_router`` wrap them with
@@ -30,18 +34,30 @@ import numpy as np
 
 from .spec import FAMILIES, router_config, spec_of
 
-#: 2 adds the IVF-PQ index fields (anchors, packed codes, codebooks, cold
-#: raw rows); version-1 artifacts (raw IVF or no index) remain readable.
-FORMAT_VERSION = 2
+#: 3 adds the streaming tier (`DynamicIVFIndex`: base index under a
+#: ``base/`` prefix, pending delta rows/assignments, delta_cap, append and
+#: re-cluster counters, and the re-build parameters a compaction replays);
+#: 2 added the IVF-PQ index fields (anchors, packed codes, codebooks, cold
+#: raw rows); version-1/2 artifacts remain readable — restore is field-set
+#: driven, not version-switched.
+FORMAT_VERSION = 3
 MIN_FORMAT_VERSION = 1
 _IVF_FIELDS = ("centroids", "sup_cm", "ids_cm", "inv_cm", "n_rows")
 _IVFPQ_FIELDS = ("centroids", "anchors", "codes_cm", "ids_cm", "inv_cm",
                  "codebooks", "sup_flat", "n_rows", "m", "nbits")
+#: scalar metadata of the streaming tier; build params use -1 = "unset"
+_DYN_META = ("delta_cap", "appends", "reclusters")
+_DYN_BUILD_KEYS = ("n_clusters", "seed", "m", "nbits", "lane_pad")
 
 
 def _is_ivf(val) -> bool:
     from repro.kernels.knn_ivf.ops import IVFIndex, IVFPQIndex
     return isinstance(val, (IVFIndex, IVFPQIndex))
+
+
+def _is_dynamic(val) -> bool:
+    from repro.kernels.knn_ivf.ops import DynamicIVFIndex
+    return isinstance(val, DynamicIVFIndex)
 
 
 def _index_fields(val):
@@ -92,6 +108,21 @@ def _scalar(arr):
     return float(arr)
 
 
+def _collect_dynamic(val, attr, out):
+    """Serialize a `DynamicIVFIndex`: base fields under ``base/``, the delta
+    tier verbatim (bitwise reload of pending rows), counters, and the
+    re-build parameters a post-load re-cluster must replay."""
+    for f in _index_fields(val.base):
+        out[f"{attr}/base/{f}"] = np.asarray(getattr(val.base, f))
+    out[f"{attr}/delta_x"] = np.asarray(val.delta_x, np.float32)
+    out[f"{attr}/delta_assign"] = np.asarray(val.delta_assign, np.int32)
+    for meta in _DYN_META:
+        out[f"{attr}/{meta}"] = np.asarray(getattr(val, meta))
+    for bk in _DYN_BUILD_KEYS:
+        v = val.build_kw.get(bk)
+        out[f"{attr}/build/{bk}"] = np.asarray(-1 if v is None else int(v))
+
+
 def collect_state(router):
     """Flat ``{key: np.ndarray}`` of every fitted attribute the router's
     ``state_attrs`` declares (missing/None attributes are skipped)."""
@@ -100,7 +131,9 @@ def collect_state(router):
         val = getattr(router, attr, None)
         if val is None:
             continue
-        if _is_ivf(val):
+        if _is_dynamic(val):
+            _collect_dynamic(val, attr, out)
+        elif _is_ivf(val):
             for f in _index_fields(val):
                 out[f"{attr}/{f}"] = np.asarray(getattr(val, f))
         elif isinstance(val, (dict, list, tuple)):
@@ -110,9 +143,51 @@ def collect_state(router):
     return out
 
 
+def _restore_index(sub):
+    """Rebuild a frozen IVF / IVF-PQ index from its serialized field set
+    (the two sets are disjoint, which is how they are told apart)."""
+    if set(sub) == set(_IVF_FIELDS):
+        from repro.kernels.knn_ivf.ops import IVFIndex
+        cent, sup, ids, inv = (np.asarray(sub[f]) for f in _IVF_FIELDS[:-1])
+        return IVFIndex(jnp.asarray(cent), jnp.asarray(sup), jnp.asarray(ids),
+                        jnp.asarray(inv), int(sub["n_rows"]), sup, ids, inv)
+    if set(sub) == set(_IVFPQ_FIELDS):
+        # assemble_ivfpq rebuilds the derived pieces (device views, host
+        # mirrors, expanded codebook matmul form) so a reloaded index is
+        # byte-identical to a freshly built one
+        from repro.kernels.knn_ivf.ops import assemble_ivfpq
+        arrays = {f: np.asarray(sub[f]) for f in _IVFPQ_FIELDS[:-3]}
+        return assemble_ivfpq(**arrays, n_rows=int(sub["n_rows"]),
+                              m=int(sub["m"]), nbits=int(sub["nbits"]))
+    raise ValueError(f"unrecognized index field set {sorted(sub)}")
+
+
+def _restore_dynamic(sub):
+    """Inverse of ``_collect_dynamic``: rebuild the frozen base from its
+    prefixed fields, then reattach the delta tier bitwise plus the counters
+    and re-build parameters."""
+    from repro.kernels.knn_ivf.ops import DynamicIVFIndex
+    base_fields = {k[len("base/"):]: v for k, v in sub.items()
+                   if k.startswith("base/")}
+    build_kw = {}
+    for bk in _DYN_BUILD_KEYS:
+        arr = sub.get(f"build/{bk}")
+        if arr is not None and int(arr) != -1:
+            build_kw[bk] = int(arr)
+    dyn = DynamicIVFIndex(_restore_index(base_fields),
+                          delta_cap=int(sub["delta_cap"]),
+                          build_kw=build_kw)
+    dyn.delta_x = np.asarray(sub["delta_x"], np.float32)
+    dyn.delta_assign = np.asarray(sub["delta_assign"], np.int32)
+    dyn.appends = int(sub["appends"])
+    dyn.reclusters = int(sub["reclusters"])
+    return dyn
+
+
 def restore_state(router, state):
     """Inverse of ``collect_state``: group keys by attribute, rebuild plain
-    arrays, python scalars, param pytrees, or the IVF index."""
+    arrays, python scalars, param pytrees, the IVF index, or the streaming
+    `DynamicIVFIndex` wrapper (detected by its ``delta_x`` key)."""
     groups = {}
     for key, val in state.items():
         head, _, rest = key.partition("/")
@@ -124,22 +199,10 @@ def restore_state(router, state):
         if list(sub) == [""]:
             arr = sub[""]
             setattr(router, attr, _scalar(arr) if arr.ndim == 0 else arr)
-        elif set(sub) == set(_IVF_FIELDS):
-            from repro.kernels.knn_ivf.ops import IVFIndex
-            cent, sup, ids, inv = (np.asarray(sub[f])
-                                   for f in _IVF_FIELDS[:-1])
-            setattr(router, attr, IVFIndex(
-                jnp.asarray(cent), jnp.asarray(sup), jnp.asarray(ids),
-                jnp.asarray(inv), int(sub["n_rows"]), sup, ids, inv))
-        elif set(sub) == set(_IVFPQ_FIELDS):
-            # assemble_ivfpq rebuilds the derived pieces (device views, host
-            # mirrors, expanded codebook matmul form) so a reloaded index is
-            # byte-identical to a freshly built one
-            from repro.kernels.knn_ivf.ops import assemble_ivfpq
-            arrays = {f: np.asarray(sub[f]) for f in _IVFPQ_FIELDS[:-3]}
-            setattr(router, attr, assemble_ivfpq(
-                **arrays, n_rows=int(sub["n_rows"]), m=int(sub["m"]),
-                nbits=int(sub["nbits"])))
+        elif "delta_x" in sub:
+            setattr(router, attr, _restore_dynamic(sub))
+        elif set(sub) in (set(_IVF_FIELDS), set(_IVFPQ_FIELDS)):
+            setattr(router, attr, _restore_index(sub))
         else:
             setattr(router, attr, _unflatten_tree(sub))
     return router

@@ -24,6 +24,14 @@ When a mesh is supplied, all backends go through their mesh-sharded
 variants in `repro.core.sharded_knn` (support rows / cluster lists sharded
 across every device, per-device top-k merged with one tiny all-gather).
 
+Streaming updates: ``partial_fit(X, scores, costs)`` appends observations to
+the support arrays — for a non-parametric router that IS the whole training
+step.  With an approximate backend the rows also land in a
+`DynamicIVFIndex` delta tier (exact-scanned, merged into every shortlist)
+that is compacted by a full re-cluster once it exceeds ``delta_cap``;
+``online=True`` (spec ``@online=1,delta_cap=..``) wraps the index at fit
+time, otherwise the wrap happens lazily on the first ``partial_fit``.
+
 ``predict_utility`` / ``select`` / ``confidence`` semantics are identical
 across backends: approximate retrieval can return fewer than k valid
 neighbours on pathological probe sets (index -1 slots), which are excluded
@@ -37,7 +45,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
+from repro.kernels.knn_ivf.ops import (DEFAULT_DELTA_CAP, DEFAULT_NPROBE,
+                                       DEFAULT_RERANK, DynamicIVFIndex,
                                        build_ivf_index, build_ivfpq_index,
                                        ivf_topk, ivfpq_topk)
 from repro.kernels.knn_topk.ops import knn_topk
@@ -60,7 +69,8 @@ class KNNRouter(Router):
                  n_clusters: int | None = None,
                  nprobe: int = DEFAULT_NPROBE,
                  m: int | None = None, nbits: int = 8,
-                 rerank: int = DEFAULT_RERANK):
+                 rerank: int = DEFAULT_RERANK,
+                 online: bool = False, delta_cap: int = DEFAULT_DELTA_CAP):
         if index not in _INDEXES:
             raise ValueError(f"index must be one of {_INDEXES}, "
                              f"got {index!r}")
@@ -75,10 +85,20 @@ class KNNRouter(Router):
         self.m = m
         self.nbits = nbits
         self.rerank = rerank
+        self.online = bool(online)
+        self.delta_cap = int(delta_cap)
         suffix = {"exact": "", "ivf": " IVF", "ivfpq": " IVF-PQ"}[index]
         self.name = f"kNN (k={k}){suffix}"
 
     # ---- fit = store the support set (+ coarse quantizer / PQ codebooks) --
+    def _index_build_kw(self, seed: int) -> dict:
+        """Builder kwargs a `DynamicIVFIndex` re-cluster must replay so the
+        compacted index equals a from-scratch build bitwise."""
+        kw = {"n_clusters": self.n_clusters, "seed": seed}
+        if self.index == "ivfpq":
+            kw.update(m=self.m, nbits=self.nbits)
+        return kw
+
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
         self._record_fit(ds, seed)
         X, S, C = ds.part("train")
@@ -91,7 +111,69 @@ class KNNRouter(Router):
             self._ivf = build_ivfpq_index(self._X, self.n_clusters,
                                           m=self.m, nbits=self.nbits,
                                           seed=seed)
+        if self.online and self.index != "exact":
+            self._ivf = DynamicIVFIndex(self._ivf, delta_cap=self.delta_cap,
+                                        build_kw=self._index_build_kw(seed))
         return self
+
+    # ---- streaming updates: appending a row IS the whole training step ----
+    def partial_fit(self, X: np.ndarray, scores: np.ndarray,
+                    costs: np.ndarray | None = None,
+                    recluster="auto") -> "KNNRouter":
+        """Absorb new (embedding, per-model score/cost) observations without
+        refitting: rows are appended to the support arrays and — for the
+        approximate backends — to the index's exact-scanned delta tier, so
+        the very next query can retrieve them.  ``costs`` defaults to zero
+        (pure-quality feedback).
+
+        ``recluster``: ``"auto"`` (default) compacts the index once the
+        delta tier exceeds ``delta_cap`` — the amortized policy; ``False``
+        never compacts (callers control timing); ``True`` forces a compaction
+        now.  A non-online approximate index is wrapped into a
+        `DynamicIVFIndex` lazily on the first call."""
+        if getattr(self, "_S", None) is None:
+            raise RuntimeError("KNNRouter.partial_fit() called before fit(); "
+                               "the streaming step appends to a fitted "
+                               "support set")
+        X = np.atleast_2d(np.asarray(X, np.float32))
+        S = np.atleast_2d(np.asarray(scores, np.float32))
+        M = self._S.shape[1]
+        if S.shape != (len(X), M):
+            raise ValueError(f"scores must have shape ({len(X)}, {M}) to "
+                             f"match the fitted model axis, got {S.shape}")
+        if costs is None:
+            C = np.zeros_like(S)
+        else:
+            C = np.atleast_2d(np.asarray(costs, np.float32))
+            if C.shape != S.shape:
+                raise ValueError(f"costs must match scores shape {S.shape}, "
+                                 f"got {C.shape}")
+        Xn = normalize_rows(X)
+        self._X = np.concatenate([self._X, Xn])
+        self._S = np.concatenate([self._S, S])
+        self._C = np.concatenate([self._C, C])
+        if getattr(self, "_train_best", None) is not None:
+            # keep the selection vote consistent: extend the gold labels at
+            # the lambda fit_selection derived them with
+            lam = self._sel_lam if self._sel_lam is not None else 0.0
+            self._train_best = np.concatenate(
+                [self._train_best, gold_labels(S, C, lam)])
+        if self.index != "exact":
+            if not isinstance(self._ivf, DynamicIVFIndex):
+                self._ivf = DynamicIVFIndex(
+                    self._ivf, delta_cap=self.delta_cap,
+                    build_kw=self._index_build_kw(self.fit_seed or 0))
+            self._ivf.append(Xn)
+            if recluster is True:
+                self._ivf.recluster()
+            elif recluster == "auto":
+                self._ivf.maybe_recluster()
+        return self
+
+    @property
+    def support_size(self) -> int:
+        """Rows currently backing retrieval (grows under partial_fit)."""
+        return 0 if getattr(self, "_S", None) is None else len(self._S)
 
     def _neighbors(self, X: np.ndarray):
         q = normalize_rows(X)
@@ -151,6 +233,7 @@ class KNNRouter(Router):
     def fit_selection(self, ds: RoutingDataset, lam: float, seed: int = 0):
         self.fit(ds, seed=seed)
         X, S, C = ds.part("train")
+        self._sel_lam = float(lam)      # partial_fit extends the vote labels
         self._train_best = gold_labels(S, C, lam)
         return self
 
@@ -213,12 +296,8 @@ class KNNRouter(Router):
         super().load_state_dict(state)
         if (getattr(self, "_X", None) is None
                 and getattr(self, "_ivf", None) is not None):
-            if self.index == "ivfpq":
-                self._X = self._ivf.sup_flat_h     # same array, same bytes
+            if isinstance(self._ivf, DynamicIVFIndex):
+                self._X = self._ivf.all_rows()     # base + pending delta
             else:
-                # inverse of the cluster-major scatter: exact float copies
-                ids, sup = self._ivf.ids_h, self._ivf.sup_h
-                X = np.empty((self._ivf.n_rows, sup.shape[2]), np.float32)
-                X[ids[ids >= 0]] = sup[ids >= 0]
-                self._X = X
+                self._X = self._ivf.rows()         # exact float copies
         return self

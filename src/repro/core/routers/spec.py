@@ -14,6 +14,9 @@ Spec-string grammar (RouteLLM-style addressable routers)::
     knn100-ivfpq        same, product-quantized IVF (ADC + exact re-rank)
     knn100-ivfpq@m=16,nbits=8,rerank=4   ... with explicit PQ knobs
     knn100-ivf@lam=0.5  ... with a default routing lambda of 0.5
+    knn100-ivf@online=1,delta_cap=4096   streaming index: appended rows land
+                        in an exact-scanned delta tier, compacted by a full
+                        re-cluster once it exceeds delta_cap
     mlp@epochs=40       MLP router with a constructor override
     graph10@lr=1e-3     constructor kwargs are typed (int/float/bool/str)
 

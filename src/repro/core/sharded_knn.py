@@ -18,6 +18,16 @@ IVF-PQ (`sharded_ivfpq_topk`): same sharding layout, but each device holds
 PACKED PQ code lists (~16x smaller) and ADC-scores them against replicated
 codebooks; the merged global shortlist is exactly re-ranked against the
 cold raw rows outside the shard_map.
+
+Streaming (`DynamicIVFIndex`): append-local, re-cluster-replicated.  The
+delta tier is a host-resident buffer appended to locally — it is never
+sharded (it is delta_cap-bounded and exact-scanned, so sharding it would
+trade a tiny scan for a collective); both IVF entry points unwrap the
+dynamic index, run the sharded search over the frozen base, and merge the
+delta scan outside the shard_map.  A re-cluster replaces the base wholesale,
+and because both functions lay out their shards from ``index.base`` on
+every call, the compacted partition is re-sharded across the mesh on the
+very next query — no explicit redistribution step.
 """
 from __future__ import annotations
 
@@ -30,7 +40,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
-                                       IVFIndex, IVFPQIndex, _rerank_exact)
+                                       DynamicIVFIndex, IVFIndex, IVFPQIndex,
+                                       _rerank_exact)
 from repro.kernels.knn_ivf.pq import unpack_codes_jnp
 from repro.kernels.knn_ivf.ref import ivf_probe
 from repro.kernels.knn_topk.ops import knn_topk
@@ -119,7 +130,14 @@ def sharded_ivf_topk(queries, index: IVFIndex, k: int, mesh: Mesh,
     lists) and the gather traffic; communication stays O(devices * k).  The
     dense (Q, nprobe, L) scoring einsum itself still runs at full width on
     every device — masked slots cost FLOPs but no HBM reads; a ragged
-    owned-pairs-only formulation is future work."""
+    owned-pairs-only formulation is future work.
+
+    A `DynamicIVFIndex` runs the sharded search over its frozen base and
+    merges the host-resident delta tier outside the shard_map (append-local
+    / re-cluster-replicated — see the module docstring)."""
+    if isinstance(index, DynamicIVFIndex):
+        sc, ix = sharded_ivf_topk(queries, index.base, k, mesh, nprobe=nprobe)
+        return index.merge_delta(queries, sc, ix, k)
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     C, L, D = index.sup_cm.shape
@@ -182,7 +200,15 @@ def sharded_ivfpq_topk(queries, index: IVFPQIndex, k: int, mesh: Mesh,
     O(devices * rerank * k) all-gather as `sharded_ivf_topk`.  Stage 2
     (outside shard_map): the merged global shortlist is re-scored exactly
     against the cold raw rows — a ~rerank*k row gather per query, the same
-    host-side cold tier as the single-device path."""
+    host-side cold tier as the single-device path.
+
+    A `DynamicIVFIndex` runs the sharded two-stage search over its frozen
+    base and merges the host-resident delta tier outside the shard_map
+    (append-local / re-cluster-replicated — see the module docstring)."""
+    if isinstance(index, DynamicIVFIndex):
+        sc, ix = sharded_ivfpq_topk(queries, index.base, k, mesh,
+                                    nprobe=nprobe, rerank=rerank)
+        return index.merge_delta(queries, sc, ix, k)
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     C, L, MB = index.codes_cm.shape

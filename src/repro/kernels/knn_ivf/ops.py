@@ -30,6 +30,15 @@ SAME coarse partition and tiling plan: hot lists hold packed uint8 codes
 `pq_kernel.py`), and a shortlist of ``rerank * k`` ADC candidates is
 re-scored exactly against the raw rows kept as a flat cold tier — two-stage
 search that trades ~16x hot HBM for a ~rerank*k-row gather per query.
+
+``DynamicIVFIndex`` converts either frozen index into a STREAMING one: new
+rows are assigned to their nearest coarse centroid and accumulate in a flat
+exact-scanned delta tier that every ``ivf_topk`` / ``ivfpq_topk`` call
+merges into its shortlist (appended rows are retrieved with exact scores,
+so the delta tier can only help recall); ``recluster()`` compacts the delta
+into a freshly re-trained coarse partition (and PQ codebooks) once it
+exceeds ``delta_cap`` — an amortized rebuild that the query path itself
+never waits on.
 """
 from __future__ import annotations
 
@@ -86,6 +95,15 @@ class IVFIndex:
         return int(self.sup_h.nbytes + self.ids_h.nbytes + self.inv_h.nbytes
                    + np.asarray(self.centroids).nbytes)
 
+    def rows(self) -> np.ndarray:
+        """Raw support rows in ORIGINAL row order — the inverse of the
+        cluster-major scatter, float-exact copies.  The single source of the
+        un-scatter invariant (artifact reload and the streaming tier both
+        rebuild the flat support from it)."""
+        X = np.empty((self.n_rows, self.sup_h.shape[2]), np.float32)
+        X[self.ids_h[self.ids_h >= 0]] = self.sup_h[self.ids_h >= 0]
+        return X
+
 
 @dataclasses.dataclass(frozen=True)
 class IVFPQIndex:
@@ -125,6 +143,11 @@ class IVFPQIndex:
     def code_bytes(self) -> int:
         """Packed bytes per row (m*nbits/8)."""
         return self.codes_cm.shape[2]
+
+    def rows(self) -> np.ndarray:
+        """Raw support rows in ORIGINAL row order — the flat cold tier is
+        already stored that way (same array, same bytes)."""
+        return self.sup_flat_h
 
     @functools.cached_property
     def cb_mat(self) -> jnp.ndarray:
@@ -337,6 +360,208 @@ def build_ivfpq_index(support, n_clusters: int | None = None,
         at += len(rows)
     return assemble_ivfpq(centroids, anchors, codes_cm, ids_cm, inv_cm,
                           codebooks, sup, n, m, nbits)
+
+
+#: delta rows tolerated before ``maybe_recluster`` compacts the index; at
+#: the default the rebuild cost amortizes to O(build / 4096) per append
+DEFAULT_DELTA_CAP = 4096
+
+
+class DynamicIVFIndex:
+    """Streaming wrapper over a frozen `IVFIndex` / `IVFPQIndex`.
+
+    ``append`` assigns each new row to its nearest coarse centroid — an
+    O(C*D)/row observability record (``delta_occupancy``) of WHERE the
+    stream is landing, persisted with the artifact so an operator can see
+    whether appends concentrate in few lists (drift) before a compaction —
+    and stores the row in a flat delta tier that `ivf_topk` / `ivfpq_topk`
+    EXACTLY scan and merge into every shortlist — so a freshly appended row is
+    immediately retrievable with an exact cosine score, and the recall of
+    the combined index is bounded below by the frozen base's recall on the
+    base rows (the delta tier cannot lose its own rows).
+
+    ``recluster()`` folds the delta back into the base by re-training the
+    coarse partition (and, for PQ, the residual codebooks) over ALL rows
+    with the ORIGINAL build parameters — by k-means seed determinism the
+    compacted index is bitwise identical to a from-scratch build over the
+    same rows, which is what makes re-clustering a pure no-op for retrieval
+    semantics.  The query path never triggers it; callers compact via
+    ``maybe_recluster`` (fires once the tier exceeds ``delta_cap``) between
+    batches, so serving never blocks on a rebuild mid-request.
+
+    Row ids are stable across the whole lifecycle: delta row j carries the
+    global id ``base.n_rows + j``, and a re-cluster rebuilds over the rows
+    in exactly that concatenated order.
+    """
+
+    def __init__(self, base, delta_cap: int = DEFAULT_DELTA_CAP,
+                 build_kw: dict | None = None):
+        if not isinstance(base, (IVFIndex, IVFPQIndex)):
+            raise TypeError(f"DynamicIVFIndex wraps an IVFIndex or "
+                            f"IVFPQIndex, got {type(base).__name__}")
+        if delta_cap < 1:
+            raise ValueError(f"delta_cap must be >= 1, got {delta_cap}")
+        self.base = base
+        d = int(base.centroids.shape[1])
+        self.delta_x = np.zeros((0, d), np.float32)
+        self.delta_assign = np.zeros((0,), np.int32)
+        self.delta_cap = int(delta_cap)
+        self.build_kw = dict(build_kw or {})
+        self.appends = 0       # rows appended over the index lifetime
+        self.reclusters = 0    # compactions run
+
+    # ---- delegated shape/meta ----
+    @property
+    def is_pq(self) -> bool:
+        return isinstance(self.base, IVFPQIndex)
+
+    @property
+    def dim(self) -> int:
+        return int(self.base.centroids.shape[1])
+
+    @property
+    def delta_rows(self) -> int:
+        return len(self.delta_x)
+
+    @property
+    def n_rows(self) -> int:
+        return self.base.n_rows + len(self.delta_x)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.base.n_clusters
+
+    @property
+    def list_size(self) -> int:
+        return self.base.list_size
+
+    @property
+    def index_bytes(self) -> int:
+        """Hot storage: the base index plus the exact-scanned delta tier."""
+        return int(self.base.index_bytes + self.delta_x.nbytes
+                   + self.delta_assign.nbytes)
+
+    # ---- streaming append ----
+    def append(self, rows) -> np.ndarray:
+        """Add rows (n, D) to the delta tier.  Returns their global row ids
+        (stable across any later re-cluster)."""
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        if rows.ndim != 2 or rows.shape[1] != self.dim:
+            raise ValueError(f"append expects rows of shape (n, {self.dim}), "
+                             f"got {rows.shape}")
+        rn = rows / np.maximum(np.linalg.norm(rows, axis=1, keepdims=True),
+                               1e-12)
+        cents = np.asarray(self.base.centroids)
+        assign = np.argmax(rn @ cents.T, axis=1).astype(np.int32)
+        ids = (self.base.n_rows + len(self.delta_x)
+               + np.arange(len(rows), dtype=np.int32))
+        self.delta_x = np.concatenate([self.delta_x, rows])
+        self.delta_assign = np.concatenate([self.delta_assign, assign])
+        self.appends += len(rows)
+        return ids
+
+    def delta_occupancy(self) -> np.ndarray:
+        """Per-centroid delta-row counts (C,) — the drift diagnostic the
+        per-row assignments exist for: a tier concentrated in few lists
+        means incoming traffic has moved and the next re-cluster will
+        re-partition substantially."""
+        return np.bincount(self.delta_assign, minlength=self.n_clusters)
+
+    # ---- compaction ----
+    @property
+    def needs_recluster(self) -> bool:
+        return len(self.delta_x) > self.delta_cap
+
+    def maybe_recluster(self) -> bool:
+        """Compact iff the delta tier exceeds ``delta_cap``.  Returns whether
+        a re-cluster ran — the amortized policy serving layers call between
+        batches."""
+        if self.needs_recluster:
+            self.recluster()
+            return True
+        return False
+
+    def all_rows(self) -> np.ndarray:
+        """Every row the index serves, global-id order (base then delta)."""
+        if not len(self.delta_x):
+            return self.base.rows()
+        return np.concatenate([self.base.rows(), self.delta_x])
+
+    def recluster(self) -> None:
+        """Re-train the coarse partition (and PQ codebooks on residuals) over
+        base + delta rows with the original build parameters, then clear the
+        delta tier.  With the same seed this equals a from-scratch build over
+        the concatenated rows bitwise (guarded by the seed-determinism
+        regression test), so retrieval semantics are unchanged — only the
+        approximation quality is restored to the fresh-build operating
+        point."""
+        rows = self.all_rows()
+        kw = self.build_kw
+        if self.is_pq:
+            self.base = build_ivfpq_index(
+                rows, n_clusters=kw.get("n_clusters"),
+                m=kw.get("m", self.base.m),      # keep the base's geometry
+                nbits=kw.get("nbits", self.base.nbits),
+                seed=kw.get("seed", 0), lane_pad=kw.get("lane_pad", _LANE_PAD))
+        else:
+            self.base = build_ivf_index(
+                rows, n_clusters=kw.get("n_clusters"), seed=kw.get("seed", 0),
+                lane_pad=kw.get("lane_pad", _LANE_PAD))
+        self.delta_x = np.zeros((0, self.dim), np.float32)
+        self.delta_assign = np.zeros((0,), np.int32)
+        self.reclusters += 1
+
+    # ---- delta-tier scan + merge ----
+    def delta_topk(self, queries, k: int):
+        """Exact cosine scan of the flat delta tier (numpy: the tier's shape
+        changes every append, so a jitted scan would retrace per size — and
+        the tier is delta_cap-bounded, so the scan is O(Q * delta_cap * D)).
+        Output contract matches `ivf_topk`: -inf / -1 beyond the valid
+        candidates; ids are global (offset by the base row count)."""
+        q = np.asarray(queries, np.float32)
+        qn, nd = len(q), len(self.delta_x)
+        kk = min(k, nd)
+        sc = np.full((qn, k), -np.inf, np.float32)
+        ix = np.full((qn, k), -1, np.int32)
+        if kk == 0:
+            return sc, ix
+        inv = 1.0 / np.maximum(np.linalg.norm(self.delta_x, axis=1), 1e-12)
+        sims = (q @ self.delta_x.T) * inv
+        if kk < nd:
+            part = np.argpartition(-sims, kk - 1, axis=1)[:, :kk]
+        else:
+            part = np.broadcast_to(np.arange(nd), (qn, nd))
+        psims = np.take_along_axis(sims, part, axis=1)
+        order = np.argsort(-psims, axis=1, kind="stable")
+        top = np.take_along_axis(part, order, axis=1)
+        sc[:, :kk] = np.take_along_axis(sims, top, axis=1)
+        ix[:, :kk] = (self.base.n_rows + top).astype(np.int32)
+        return sc, ix
+
+    def merge_delta(self, queries, base_sc, base_ix, k: int):
+        """Merge the base index's top-k with the delta tier's exact scan.
+        Base candidates win ties (stable sort, base first); the two id
+        ranges are disjoint by construction so no dedup is needed.  With an
+        EMPTY tier — the steady state between feedback batches — the base
+        result passes through untouched (no device->host round trip on the
+        serving hot path)."""
+        if not len(self.delta_x):
+            return base_sc, base_ix
+        k = min(k, self.n_rows)
+        bs = np.asarray(base_sc, np.float32)
+        bi = np.asarray(base_ix, np.int32)
+        if bs.shape[1] < k:       # base clamped below k: pad to merge width
+            padw = k - bs.shape[1]
+            bs = np.pad(bs, ((0, 0), (0, padw)), constant_values=-np.inf)
+            bi = np.pad(bi, ((0, 0), (0, padw)), constant_values=-1)
+        ds_sc, ds_ix = self.delta_topk(queries, k)
+        sc = np.concatenate([bs[:, :k], ds_sc], axis=1)
+        ix = np.concatenate([bi[:, :k], ds_ix], axis=1)
+        order = np.argsort(-sc, axis=1, kind="stable")[:, :k]
+        out_sc = np.take_along_axis(sc, order, axis=1)
+        out_ix = np.take_along_axis(ix, order, axis=1)
+        out_ix[~np.isfinite(out_sc)] = -1
+        return jnp.asarray(out_sc), jnp.asarray(out_ix)
 
 
 def plan_tile_probes(q_probe: np.ndarray, block_q: int):
@@ -597,7 +822,15 @@ def ivf_topk(queries, index: IVFIndex, k: int,
     backend: 'host' (CPU BLAS inverted traversal — default), 'tiles'
     (jittable XLA twin of the kernel's tiling), or 'pallas' (the kernel;
     also selected by use_pallas=True).  All three implement identical
-    per-query top-nprobe semantics."""
+    per-query top-nprobe semantics.
+
+    A `DynamicIVFIndex` dispatches to its frozen base on the chosen backend
+    and merges the exact-scanned delta tier into the result."""
+    if isinstance(index, DynamicIVFIndex):
+        base_sc, base_ix = ivf_topk(
+            queries, index.base, k, nprobe, use_pallas=use_pallas,
+            backend=backend, interpret=interpret, block_q=block_q)
+        return index.merge_delta(queries, base_sc, base_ix, k)
     nprobe = max(1, min(nprobe, index.n_clusters))
     k = min(k, index.n_rows, nprobe * index.list_size)
     backend = backend or ("pallas" if use_pallas else "host")
@@ -643,7 +876,18 @@ def ivfpq_topk(queries, index: IVFPQIndex, k: int,
     2 and returns raw ADC scores (cheapest, recall bounded by quantization
     error); ``rerank=1`` re-scores just the top-k shortlist — exact scores
     re-sorted among themselves, so the candidate SET still comes from ADC
-    but the returned ordering is exact."""
+    but the returned ordering is exact.
+
+    A `DynamicIVFIndex` dispatches to its frozen base and merges the
+    exact-scanned delta tier.  With ``rerank >= 1`` both sides carry exact
+    cosine scores, so the merge order is exact; at ``rerank=0`` the base
+    side is raw ADC and the merge compares approximate base scores with
+    exact delta scores (delta rows keep their exactness either way)."""
+    if isinstance(index, DynamicIVFIndex):
+        base_sc, base_ix = ivfpq_topk(
+            queries, index.base, k, nprobe, rerank, use_pallas=use_pallas,
+            backend=backend, interpret=interpret, block_q=block_q)
+        return index.merge_delta(queries, base_sc, base_ix, k)
     nprobe = max(1, min(nprobe, index.n_clusters))
     k = min(k, index.n_rows, nprobe * index.list_size)
     kk = min(max(rerank, 1) * k, index.n_rows, nprobe * index.list_size)

@@ -25,6 +25,12 @@ confidence-fallback route would pay for the neighbour search twice, which
 on a kNN router is the entire per-request cost.  Router/engine model-count
 mismatches raise at construction instead of silently aliasing choices onto
 the engine list.
+
+``observe`` closes the loop: routed-then-judged traffic is fed back into
+routers exposing ``partial_fit`` (kNN), appending new support rows — and,
+on the approximate backends, delta-tier index entries — in place.  Appends
+never block the request path; index compaction (re-cluster) is amortized
+behind the router's ``delta_cap``.
 """
 from __future__ import annotations
 
@@ -103,6 +109,7 @@ class RouterService:
         self.fallback_model = fallback_model
         self.confidence_floor = confidence_floor
         self._uid = 0
+        self.observed = 0          # feedback rows ingested via observe()
         self.log: List[RoutedResult] = []
 
     @classmethod
@@ -219,6 +226,40 @@ class RouterService:
                 confidence=float(conf[i]) if conf is not None else None)
             results.append(res)
         return results
+
+    # ---- feedback ingestion ----
+    def observe(self, queries, scores, costs=None, recluster="auto") -> int:
+        """Routed-then-judged traffic becomes new support rows in place: the
+        non-parametric router's whole "training step" is appending the
+        observation, so the very next identical query retrieves it.
+
+        ``queries`` — a list of texts (embedded here with the same encoder
+        the routing path uses) or a pre-embedded (n, D) array; ``scores`` —
+        judged per-model quality, shape (n, M) in ``model_names`` order;
+        ``costs`` — optional, same shape, defaults to zero.
+
+        The request path never blocks on an index rebuild: appends land in
+        the exact-scanned delta tier, and compaction only runs here, once
+        the tier exceeds the router's ``delta_cap`` (``recluster="auto"``;
+        pass ``False`` to defer entirely, ``True`` to force one now).
+        Returns the router's support size after ingestion."""
+        pf = getattr(self.router, "partial_fit", None)
+        if not callable(pf):
+            raise TypeError(f"router {self.spec!r} does not support online "
+                            f"updates (no partial_fit); use a kNN-family "
+                            f"router, e.g. 'knn100-ivf@online=1'")
+        if len(queries) and isinstance(queries[0], str):
+            emb = encoder.embed_texts(list(queries))
+        else:
+            emb = np.atleast_2d(np.asarray(queries, np.float32))
+        S = np.atleast_2d(np.asarray(scores, np.float32))
+        if S.shape != (len(emb), len(self.model_names)):
+            raise ValueError(f"scores must have shape ({len(emb)}, "
+                             f"{len(self.model_names)}) in model order "
+                             f"{self.model_names}, got {S.shape}")
+        pf(emb, S, costs, recluster=recluster)
+        self.observed += len(emb)
+        return int(getattr(self.router, "support_size", -1))
 
     # ---- execution ----
     def execute(self, results: List[RoutedResult]) -> Dict[str, int]:

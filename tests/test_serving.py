@@ -151,6 +151,80 @@ def test_service_from_artifact_roundtrip(tmp_path):
                       lam=2.0).route_embeddings(emb))
 
 
+def _engine_pair():
+    names = ["qwen3-4b", "mamba2-370m"]
+    engines = {n: ServingEngine(reduced(get_config(n)), max_slots=2,
+                                cache_len=48, seed=i)
+               for i, n in enumerate(names)}
+    return names, engines
+
+
+def test_observe_feedback_ingestion():
+    """Routed batch -> observe -> the next identical query retrieves the new
+    support row: routed-then-judged traffic updates the index in place, with
+    no refit and no service restart."""
+    from repro.serving.router_service import knn_service
+    names, engines = _engine_pair()
+    ds = _routing_ds(names)
+    svc = knn_service(ds, engines, k=3, index="ivf", lam=1.0,
+                      online=True, delta_cap=500)
+    novel = "an entirely unseen subject zqx"
+    svc.serve_texts([novel], max_new_tokens=2)     # routed blind
+    n0 = svc.router.support_size
+    judged = np.array([[0.95, 0.05]], np.float32)
+    size = svc.observe([novel], judged)
+    assert size == n0 + 1 and svc.observed == 1
+    assert svc.router._ivf.delta_rows == 1         # appended, not rebuilt
+    # the identical query now retrieves its own feedback row
+    emb = encoder.embed_texts([novel])
+    _, idx = svc.router._neighbors(emb)
+    assert (n0) in set(int(i) for i in idx[0])     # new row id == old size
+    # and pre-embedded ingestion + explicit compaction also work
+    svc.observe(emb, judged, recluster=True)
+    assert svc.router._ivf.delta_rows == 0
+    assert svc.router._ivf.reclusters == 1
+
+
+def test_observe_validation():
+    names, engines = _engine_pair()
+    ds = _routing_ds(names)
+    svc = RouterService(KNNRouter(k=3).fit(ds), engines)
+    with pytest.raises(ValueError, match="scores"):
+        svc.observe(ds.embeddings[:2], np.zeros((2, 3), np.float32))
+    from repro.core.routers import make_router
+    lin = RouterService(make_router("linear").fit(ds), engines)
+    with pytest.raises(TypeError, match="partial_fit"):
+        lin.observe(ds.embeddings[:1], np.zeros((1, 2), np.float32))
+
+
+def test_execute_counters_under_fallback_routing():
+    """With the confidence floor above any attainable agreement, every
+    request must be re-routed to the fallback model — and execute() has to
+    account for exactly those requests: per-model step counts only for
+    engines that served, the log growing by the batch, uids unique."""
+    names, engines = _engine_pair()
+    ds = _routing_ds(names)
+    svc = RouterService(KNNRouter(k=3).fit(ds), engines, lam=1.0,
+                        fallback_model=names[1], confidence_floor=1.5)
+    texts = [f"fallback probe {i}" for i in range(4)]
+    results = svc.submit_texts(texts, max_new_tokens=2)
+    assert [r.model for r in results] == [names[1]] * 4
+    fi = svc.model_names.index(names[1])
+    assert all(r.confidence is not None and r.confidence < 1.5
+               for r in results)
+    steps = svc.execute(results)
+    assert set(steps) == {names[1]}                # only the fallback served
+    assert steps[names[1]] > 0
+    assert len(svc.log) == 4
+    assert len({r.uid for r in svc.log}) == 4
+    assert all(r.request.done for r in results)
+    # a second batch keeps counting from where the first left off
+    more = svc.submit_texts(["one more"], max_new_tokens=2)
+    svc.execute(more)
+    assert len(svc.log) == 5
+    assert more[0].uid not in {r.uid for r in results}
+
+
 def test_scheduler_drains():
     cfg = reduced(get_config("qwen3-4b"))
     engines = {"a": ServingEngine(cfg, max_slots=2, cache_len=32, seed=0),

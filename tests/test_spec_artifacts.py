@@ -1,5 +1,7 @@
 """Spec-addressable router API: spec-string grammar round-trips, registry
 integrity, and save->load artifact parity for every registered family."""
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -164,3 +166,70 @@ def test_artifact_preserves_default_lam_and_ivf_layout(ds, tmp_path):
     assert r2.index == "ivf" and r2._ivf.n_clusters == r._ivf.n_clusters
     np.testing.assert_array_equal(np.asarray(r._ivf.ids_cm),
                                   np.asarray(r2._ivf.ids_cm))
+
+
+# ---------------------------------------------------------------------------
+# format_version 3: the streaming tier round-trips; v1/v2 stay readable
+# ---------------------------------------------------------------------------
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+
+def test_dynamic_artifact_round_trip_bitwise(ds, tmp_path):
+    """A mid-stream router (pending delta rows, counters ticking) reloads
+    bitwise: same predictions, same delta tier, same re-cluster bookkeeping,
+    and the manifest advertises format_version 3."""
+    import json
+    from repro.core.routers.artifacts import FORMAT_VERSION
+    from repro.kernels.knn_ivf.ops import DynamicIVFIndex
+    assert FORMAT_VERSION == 3
+    r = make_router("knn10-ivfpq@online=1,delta_cap=7,m=2").fit(ds)
+    rng = np.random.default_rng(4)
+    X = ds.part("test")[0]
+    # two appends: the first compacts (8 > 7), the second leaves a delta
+    r.partial_fit(rng.normal(size=(8, ds.dim)).astype(np.float32),
+                  rng.uniform(0, 1, (8, ds.n_models)).astype(np.float32))
+    r.partial_fit(rng.normal(size=(3, ds.dim)).astype(np.float32),
+                  rng.uniform(0, 1, (3, ds.n_models)).astype(np.float32))
+    assert r._ivf.reclusters == 1 and r._ivf.delta_rows == 3
+    s1, c1 = r.predict_utility(X)
+    path = save_router(r, tmp_path / "dyn")
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["format_version"] == 3
+    r2 = load_router(path)
+    assert isinstance(r2._ivf, DynamicIVFIndex)
+    assert r2._ivf.delta_rows == 3 and r2._ivf.appends == 11
+    assert r2._ivf.reclusters == 1 and r2._ivf.delta_cap == 7
+    np.testing.assert_array_equal(r._ivf.delta_x, r2._ivf.delta_x)
+    np.testing.assert_array_equal(r._ivf.delta_assign, r2._ivf.delta_assign)
+    s2, c2 = r2.predict_utility(X)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    # the reloaded stream keeps flowing: append + forced compaction replay
+    # the persisted build params
+    r2.partial_fit(rng.normal(size=(2, ds.dim)).astype(np.float32),
+                   rng.uniform(0, 1, (2, ds.n_models)).astype(np.float32),
+                   recluster=True)
+    assert r2._ivf.reclusters == 2 and r2._ivf.delta_rows == 0
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_pinned_legacy_artifacts_still_load(version):
+    """Checked-in v1 (raw IVF, pre-PQ) and v2 (IVF-PQ, pre-streaming)
+    artifacts must keep loading and predicting as FORMAT_VERSION moves on
+    (regenerate only via scripts/gen_artifact_fixtures.py)."""
+    import json
+    path = FIXTURES / f"artifact_v{version}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["format_version"] == version      # the pin itself
+    r = load_router(path)
+    assert r.model_names == ["model-a", "model-b"]
+    assert r.index == ("ivf" if version == 1 else "ivfpq")
+    rng = np.random.default_rng(0)
+    s, c = r.predict_utility(rng.normal(size=(5, 8)).astype(np.float32))
+    assert s.shape == c.shape == (5, 2)
+    assert np.all(np.isfinite(s)) and np.all(np.isfinite(c))
+    # a legacy router joins the streaming path transparently
+    r.partial_fit(rng.normal(size=(1, 8)).astype(np.float32),
+                  np.array([[0.5, 0.5]], np.float32))
+    assert r._ivf.delta_rows == 1
