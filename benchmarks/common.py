@@ -44,6 +44,27 @@ def routers_from_env(default, routers=None):
     return env.split(",") if env else list(default)
 
 
+def clustered_corpus(n: int, d: int, n_centers: int, seed: int):
+    """Support rows drawn from a shared Gaussian mixture — the regime the
+    paper's locality analysis (Def 7.1) says routing data lives in.
+    Returns (centers, rows); draw queries from the same centers to match.
+    Shared by the retrieval and serving benchmarks so both report recall
+    over the identical corpus model."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d)) * 3.0
+    rows = (centers[rng.integers(0, n_centers, n)]
+            + rng.normal(size=(n, d))).astype(np.float32)
+    return centers, rows
+
+
+def recall_at_k(idx, exact_sets, k: int) -> float:
+    """Mean fraction of each query's exact top-k ids recovered in ``idx``
+    (-1 padding slots simply never match)."""
+    got = np.asarray(idx)
+    return float(np.mean([len(exact_sets[i] & set(got[i])) / k
+                          for i in range(len(got))]))
+
+
 def write_csv(path: Path, header, rows):
     path.parent.mkdir(parents=True, exist_ok=True)
     with open(path, "w", newline="") as f:

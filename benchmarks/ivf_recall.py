@@ -27,9 +27,14 @@ The STREAMING sweep (``results/ivf_stream.csv``, snapshot key
 ``"streaming"``) measures the online-update path: an IVF-PQ index is built
 on part of the corpus, the rest is appended through the `DynamicIVFIndex`
 delta tier, and recall@k vs. brute force over the grown corpus plus p50
-latency are tracked per appended fraction — then a ``recluster()``
-compaction is compared against a from-scratch build over the same rows
-(identical by k-means seed determinism, so the delta is ~0).
+latency are tracked per appended fraction — for BOTH delta disciplines:
+the host backend's exact scan of the flat tier (every delta row scored for
+every query, O(Q * delta) on top of the probe cost) and the fused
+backend's PROBED per-centroid delta sub-lists (delta rows join the ADC
+scan of the probed lists, restoring the base index's cost model).  A
+``recluster()`` compaction is then compared against a from-scratch build
+over the same rows (identical by k-means seed determinism, so the delta
+is ~0).
 
 Env knobs: REPRO_IVF_N (support rows, default 100_000), REPRO_IVF_D (dim,
 default 64), REPRO_IVF_Q (queries, default 256), REPRO_IVF_K (default 100),
@@ -52,22 +57,13 @@ from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
                                        ivfpq_topk)
 from repro.kernels.knn_topk.ops import knn_topk
 
-from .common import RESULTS, Timer, write_csv
+from .common import (RESULTS, Timer, clustered_corpus,
+                     recall_at_k, write_csv)
 
 NPROBES = (1, 2, 4, 8, 16, 32)
 RERANKS = (0, 1, 2, 4, 8, 16)
 #: cumulative corpus fractions appended through the delta tier
 STREAM_FRACS = (0.02, 0.05, 0.10)
-
-
-def _clustered(n, d, n_centers, seed):
-    """Support/queries from a shared mixture — the regime the paper's
-    locality analysis (Def 7.1) says routing data lives in."""
-    rng = np.random.default_rng(seed)
-    centers = rng.normal(size=(n_centers, d)) * 3.0
-    sup = (centers[rng.integers(0, n_centers, n)]
-           + rng.normal(size=(n, d))).astype(np.float32)
-    return centers, sup
 
 
 def _p50(fn, repeats=5):
@@ -79,12 +75,6 @@ def _p50(fn, repeats=5):
             jax.block_until_ready(fn())
         times.append(t.dt)
     return float(np.median(times))
-
-
-def _recall(idx, exact_sets, k):
-    got = np.asarray(idx)
-    return float(np.mean([len(exact_sets[i] & set(got[i])) / k
-                          for i in range(len(got))]))
 
 
 def _stream_sweep(sup, qj, k, m, seed):
@@ -111,7 +101,10 @@ def _stream_sweep(sup, qj, k, m, seed):
         exact_sets = [set(r) for r in np.asarray(exact_idx)]
         t = _p50(lambda: ivfpq_topk(qj, dyn, k))
         _, idx = ivfpq_topk(qj, dyn, k)
-        return _recall(idx, exact_sets, k), t, exact_sets
+        t_p = _p50(lambda: ivfpq_topk(qj, dyn, k, backend="fused"))
+        _, idx_p = ivfpq_topk(qj, dyn, k, backend="fused")
+        return (recall_at_k(idx, exact_sets, k), t,
+                recall_at_k(idx_p, exact_sets, k), t_p, exact_sets)
 
     rows, points = [], []
     appended = 0
@@ -119,33 +112,38 @@ def _stream_sweep(sup, qj, k, m, seed):
         target = int(round(frac * n))
         dyn.append(sup[base_n + appended:base_n + target])
         appended = target
-        rec, t, _ = measure()
-        rows.append([round(frac, 3), appended, round(rec, 4), round(t, 5), 0])
+        rec, t, rec_p, t_p, _ = measure()
+        rows.append([round(frac, 3), appended, round(rec, 4), round(t, 5),
+                     round(rec_p, 4), round(t_p, 5), 0])
         points.append({"frac_appended": frac, "delta_rows": appended,
                        f"recall_at_{k}": round(rec, 4),
-                       "p50_route_latency_s": round(t, 6)})
+                       "p50_route_latency_s": round(t, 6),
+                       "probed": {f"recall_at_{k}": round(rec_p, 4),
+                                  "p50_route_latency_s": round(t_p, 6)}})
         occ = dyn.delta_occupancy()
         print(f"  ivf_stream frac={frac:.0%} delta={appended}: "
-              f"recall@{k}={rec:.3f} t={t*1e3:.1f}ms "
+              f"exact-scan recall@{k}={rec:.3f} t={t*1e3:.1f}ms | "
+              f"probed recall@{k}={rec_p:.3f} t={t_p*1e3:.1f}ms "
               f"(occupied lists {int((occ > 0).sum())}/{dyn.n_clusters}, "
               f"max {int(occ.max())})")
 
     with Timer() as t_rc:
         dyn.recluster()
-    rec_rc, t_q, exact_sets = measure()
+    rec_rc, t_q, rec_rc_p, t_q_p, exact_sets = measure()
     rows.append([round(max(STREAM_FRACS), 3), 0, round(rec_rc, 4),
-                 round(t_q, 5), 1])
+                 round(t_q, 5), round(rec_rc_p, 4), round(t_q_p, 5), 1])
     # from-scratch reference over the identical rows: equal by determinism
     fresh = build_ivfpq_index(sup[:base_n + appended], m=m, seed=seed)
     _, idx_f = ivfpq_topk(qj, fresh, k)
-    rec_fresh = _recall(idx_f, exact_sets, k)
+    rec_fresh = recall_at_k(idx_f, exact_sets, k)
     print(f"  ivf_stream recluster: recall@{k}={rec_rc:.3f} "
           f"(fresh build {rec_fresh:.3f}, |delta|={abs(rec_rc-rec_fresh):.4f}"
           f" <= 0.005) rebuild={t_rc.dt:.2f}s")
 
     write_csv(RESULTS / "ivf_stream.csv",
               ["frac_appended", "delta_rows", f"recall@{k}", "p50_t_s",
-               "post_recluster"], rows)
+               f"probed_recall@{k}", "probed_p50_t_s", "post_recluster"],
+              rows)
     return {
         "base_rows": base_n, "points": points,
         "post_recluster": {f"recall_at_{k}": round(rec_rc, 4),
@@ -162,7 +160,7 @@ def run(seed: int = 0, emit: str | None = None):
     k = int(os.environ.get("REPRO_IVF_K", 100))
     m = int(os.environ.get("REPRO_IVF_M", max(1, d // 4)))
 
-    centers, sup = _clustered(n, d, n_centers=64, seed=seed)
+    centers, sup = clustered_corpus(n, d, n_centers=64, seed=seed)
     rng = np.random.default_rng(seed + 1)
     q = (centers[rng.integers(0, len(centers), q_n)]
          + rng.normal(size=(q_n, d))).astype(np.float32)
@@ -193,7 +191,7 @@ def run(seed: int = 0, emit: str | None = None):
         for ps in params:
             t = _p50(lambda: fn(**ps))
             _, idx = fn(**ps)
-            rec = _recall(idx, exact_sets, k)
+            rec = recall_at_k(idx, exact_sets, k)
             speedup = t_exact / max(t, 1e-12)
             rows.append([name, ps.get("nprobe", "-"), ps.get("rerank", "-"),
                          round(rec, 4), round(t, 5), round(speedup, 2),

@@ -1,0 +1,300 @@
+"""Latency-under-load sweep of the serving hot path: fused single-dispatch
+routing vs the legacy host-gather multi-dispatch chain, across batch sizes,
+retrieval backends, and streaming delta fractions.
+
+What `BENCH_retrieval.json` is to recall, this is to serving latency: the
+headline numbers are the IVF-PQ **route** p50 (embedding in hand ->
+retrieval -> per-model utility -> per-request-lambda selection, one device
+sync) for
+
+  * ``fused``       — `RouterService.route_fused`: ONE jitted dispatch
+                      (sharded over the host's devices when more than one
+                      is visible — bitwise-identical, batch-axis
+                      parallelism only);
+  * ``host_gather`` — `RouterService.route_legacy` over the CPU inverted
+                      traversal: the pre-fusion chain of retrieval ->
+                      host sync -> utility dispatch -> host sync ->
+                      selection dispatch.
+
+plus p99, routed-queries/sec, a batch-size sweep (micro-batch amortization
+of the fixed dispatch cost), the streaming operating points (delta tier at
+2/5/10% of the corpus, PROBED on the fused path vs exact-scanned on the
+legacy path), and the retrieval recall@k of the fused backend so the speed
+numbers are pinned at unchanged quality.
+
+``--quick`` shrinks the corpus for CI; ``--check`` asserts the fused path
+is no slower than the host-gather path (the cheap regression guard CI
+runs); ``--emit-bench PATH`` writes the machine-readable snapshot
+(`BENCH_serving.json`).
+
+Env knobs: REPRO_SERVE_N (rows, default 100_000), REPRO_SERVE_D (dim, 64),
+REPRO_SERVE_Q (batch, 256), REPRO_SERVE_K (neighbours, 100),
+REPRO_SERVE_M (PQ subspaces, default D/4 — the same operating point
+BENCH_retrieval pins, where recall@100 clears 0.97), REPRO_SERVE_REPEATS
+(timing repeats, 15).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# batch-axis device parallelism: the fused path shard_maps over host
+# devices (bitwise-exact — verified in tests/test_fused.py); the flag must
+# land before jax initializes, so it only takes effect when this module is
+# the entry point (under benchmarks.run jax is already up -> single device)
+if "jax" not in sys.modules and "--no-shard" not in sys.argv:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count="
+                               + os.environ.get("REPRO_SERVE_DEVICES", "2"))
+
+import jax
+import numpy as np
+
+from repro.core.dataset import RoutingDataset
+from repro.core.routers.knn import KNNRouter
+from repro.kernels.knn_topk.ops import knn_topk
+from repro.serving.router_service import RouterService
+
+from .common import (RESULTS, Timer, clustered_corpus,
+                     recall_at_k, write_csv)
+
+STREAM_FRACS = (0.02, 0.05, 0.10)
+MODELS = ["model-a", "model-b"]
+
+
+def _pcts(fn, repeats):
+    """(p50, p99) wall seconds per call, jit cache warmed."""
+    fn()
+    times = []
+    for _ in range(repeats):
+        with Timer() as t:
+            fn()
+        times.append(t.dt)
+    return (float(np.percentile(times, 50)), float(np.percentile(times, 99)))
+
+
+def _routing_ds(sup, seed):
+    """Routing dataset whose TRAIN part is the whole corpus, so the
+    router's support set is exactly ``sup`` (recall is then measured
+    against brute force over the same rows)."""
+    rng = np.random.default_rng(seed + 1)
+    n = len(sup)
+    idx = np.arange(n)
+    return RoutingDataset(
+        "serve-bench", sup,
+        rng.uniform(0.2, 1.0, (n, len(MODELS))).astype(np.float32),
+        rng.uniform(0.001, 0.01, (n, len(MODELS))).astype(np.float32),
+        MODELS, train_idx=idx, val_idx=idx[:0], test_idx=idx[:0])
+
+
+def run(seed: int = 0, emit: str | None = None, quick: bool = False,
+        check: bool = False):
+    n = int(os.environ.get("REPRO_SERVE_N", 8_000 if quick else 100_000))
+    d = int(os.environ.get("REPRO_SERVE_D", 64))
+    q_n = int(os.environ.get("REPRO_SERVE_Q", 64 if quick else 256))
+    k = int(os.environ.get("REPRO_SERVE_K", 100))
+    m = int(os.environ.get("REPRO_SERVE_M", max(1, d // 4)))
+    repeats = int(os.environ.get("REPRO_SERVE_REPEATS", 7 if quick else 15))
+    lam = 0.5
+
+    devs = jax.devices()
+    qmesh = None
+    if len(devs) > 1:
+        from jax.sharding import Mesh
+        qmesh = Mesh(np.array(devs), ("q",))
+
+    centers, sup = clustered_corpus(n, d, n_centers=64, seed=seed)
+    rng = np.random.default_rng(seed + 2)
+    queries = (centers[rng.integers(0, 64, q_n)]
+               + rng.normal(size=(q_n, d))).astype(np.float32)
+    ds = _routing_ds(sup, seed)
+    lam_vec = rng.uniform(0.0, 1.0, q_n).astype(np.float32)
+
+    import jax.numpy as jnp
+    qn_j = jnp.asarray(queries / np.linalg.norm(queries, axis=1,
+                                                keepdims=True))
+    _, exact_idx = knn_topk(qn_j, jnp.asarray(
+        sup / np.maximum(np.linalg.norm(sup, axis=1, keepdims=True), 1e-12)),
+        k)
+    exact_sets = [set(r) for r in np.asarray(exact_idx)]
+
+    engines = {m: None for m in MODELS}
+    rows = []
+    out = {"bench": "serving", "n_rows": n, "dim": d, "batch": q_n, "k": k,
+           "pq_m": m, "models": len(MODELS), "devices": len(devs),
+           "backends": {}}
+
+    def measure_route(svc, fused: bool, batch):
+        if fused:
+            return _pcts(lambda: svc.route_fused(batch, lam, qmesh=qmesh),
+                         repeats)
+        return _pcts(lambda: svc.route_legacy(batch, lam), repeats)
+
+    # ---- per-backend fused vs host-gather at the headline batch ----
+    for index in ("ivfpq", "ivf", "exact"):   # exact last: its
+        # (Q, N) sims buffers churn the allocator and inflate
+        # the variance of whatever is timed after it
+        kw = {"m": m} if index == "ivfpq" else {}
+        with Timer() as t_fit:
+            router = KNNRouter(k=k, index=index, **kw).fit(ds, seed=seed)
+        svc = RouterService(router, engines, lam=lam)
+        entry = {}
+        p50_f, p99_f = measure_route(svc, True, queries)
+        entry["fused"] = {"p50_route_s": round(p50_f, 6),
+                          "p99_route_s": round(p99_f, 6),
+                          "routed_qps": round(q_n / p50_f, 1)}
+        rows.append([index, "fused", q_n, 0.0, round(p50_f, 5),
+                     round(p99_f, 5), round(q_n / p50_f, 1)])
+        # host-gather legacy baseline (for exact the retrieval is already
+        # one jit — the legacy chain still pays the extra dispatches)
+        router.backend = "host" if index != "exact" else None
+        router._dev = {}
+        p50_h, p99_h = measure_route(svc, False, queries)
+        entry["host_gather"] = {"p50_route_s": round(p50_h, 6),
+                                "p99_route_s": round(p99_h, 6),
+                                "routed_qps": round(q_n / p50_h, 1)}
+        entry["speedup_fused_vs_host"] = round(p50_h / max(p50_f, 1e-12), 2)
+        rows.append([index, "host_gather", q_n, 0.0, round(p50_h, 5),
+                     round(p99_h, 5), round(q_n / p50_h, 1)])
+        router.backend = None
+        router._dev = {}
+        if index == "ivfpq":
+            _, ix = router._neighbors(queries)
+            entry["fused"][f"recall_at_{k}"] = recall_at_k(ix, exact_sets, k)
+            out["fit_s"] = round(t_fit.dt, 2)
+        out["backends"][index] = entry
+        print(f"  serving {index}: fused p50={p50_f*1e3:.1f}ms "
+              f"host p50={p50_h*1e3:.1f}ms "
+              f"({entry['speedup_fused_vs_host']}x)")
+
+    out["ivfpq"] = out["backends"]["ivfpq"]
+
+    # ---- batch-size sweep (fused ivfpq): dispatch amortization ----
+    router = KNNRouter(k=k, index="ivfpq", m=m).fit(ds, seed=seed)
+    svc = RouterService(router, engines, lam=lam)
+    sweep = []
+    for b in (1, 8, 64, q_n):
+        if b > q_n:
+            continue
+        batch = queries[:b]
+        lam_b = lam_vec[:b]   # per-request lambdas: the sweep exercises the
+        p50, p99 = _pcts(     # vector-resolution branch end to end
+            lambda: svc.route_fused(batch, lam_b, qmesh=qmesh), repeats)
+        sweep.append({"batch": b, "p50_route_s": round(p50, 6),
+                      "p99_route_s": round(p99, 6),
+                      "routed_qps": round(b / p50, 1),
+                      "per_request_ms": round(p50 / b * 1e3, 3)})
+        rows.append(["ivfpq", "fused", b, 0.0, round(p50, 5), round(p99, 5),
+                     round(b / p50, 1)])
+        print(f"  serving batch={b}: p50={p50*1e3:.2f}ms "
+              f"qps={b/p50:.0f}")
+    out["batch_sweep"] = sweep
+
+    # ---- streaming: probed delta (fused) vs exact scan (host) ----
+    base_frac = 1.0 - max(STREAM_FRACS)
+    base_n = int(round(base_frac * n))
+    stream_router = KNNRouter(k=k, index="ivfpq", m=m, online=True,
+                              delta_cap=n).fit(
+        _routing_ds(sup[:base_n], seed), seed=seed)
+    ssvc = RouterService(stream_router, engines, lam=lam)
+    p50_base, _ = _pcts(lambda: ssvc.route_fused(queries, lam, qmesh=qmesh),
+                        repeats)
+    points = []
+    appended = 0
+    rng_s = np.random.default_rng(seed + 3)
+    for frac in STREAM_FRACS:
+        target = int(round(frac * n))
+        chunk = sup[base_n + appended:base_n + target]
+        ssvc.observe(chunk,
+                     rng_s.uniform(0.2, 1.0, (len(chunk), len(MODELS)))
+                     .astype(np.float32), recluster=False)
+        appended = target
+        p50_f, p99_f = _pcts(
+            lambda: ssvc.route_fused(queries, lam, qmesh=qmesh), repeats)
+        stream_router.backend = "host"
+        stream_router._dev = {}
+        p50_h, _ = _pcts(lambda: ssvc.route_legacy(queries, lam), repeats)
+        stream_router.backend = None
+        stream_router._dev = {}
+        _, ix = stream_router._neighbors(queries)
+        cur = sup[:base_n + appended]
+        _, ex_i = knn_topk(qn_j, jnp.asarray(
+            cur / np.maximum(np.linalg.norm(cur, axis=1, keepdims=True),
+                             1e-12)), k)
+        rec = recall_at_k(ix, [set(r) for r in np.asarray(ex_i)], k)
+        points.append({"frac_appended": frac, "delta_rows": appended,
+                       "fused_probed_p50_s": round(p50_f, 6),
+                       "host_exact_scan_p50_s": round(p50_h, 6),
+                       f"recall_at_{k}": round(rec, 4),
+                       "vs_base_fused": round(p50_f / max(p50_base, 1e-12),
+                                              3)})
+        rows.append(["ivfpq-stream", "fused", q_n, frac, round(p50_f, 5),
+                     round(p99_f, 5), round(q_n / p50_f, 1)])
+        rows.append(["ivfpq-stream", "host_gather", q_n, frac,
+                     round(p50_h, 5), "-", round(q_n / p50_h, 1)])
+        print(f"  serving stream frac={frac:.0%}: fused p50={p50_f*1e3:.1f}ms"
+              f" (x{p50_f/p50_base:.2f} of base) host p50={p50_h*1e3:.1f}ms "
+              f"recall@{k}={rec:.3f}")
+    out["streaming"] = {"base_rows": base_n,
+                        "base_fused_p50_s": round(p50_base, 6),
+                        "points": points}
+
+    # ---- micro-batch coalescing: N singles vs one coalesced wave ----
+    single = queries[:1]
+    p50_one, _ = _pcts(lambda: svc.route_fused(single, lam), repeats)
+    wave = queries[:64] if q_n >= 64 else queries
+    p50_wave, _ = _pcts(lambda: svc.route_fused(wave, lam, qmesh=qmesh),
+                        repeats)
+    out["coalescing"] = {
+        "single_request_p50_s": round(p50_one, 6),
+        "coalesced_wave": len(wave),
+        "coalesced_per_request_s": round(p50_wave / len(wave), 6),
+        "amortization_x": round(p50_one * len(wave) / max(p50_wave, 1e-12),
+                                1)}
+    print(f"  serving coalescing: single={p50_one*1e3:.2f}ms "
+          f"wave-of-{len(wave)}={p50_wave/len(wave)*1e3:.3f}ms/req "
+          f"({out['coalescing']['amortization_x']}x)")
+
+    write_csv(RESULTS / "serving_latency.csv",
+              ["backend", "path", "batch", "frac_appended", "p50_s", "p99_s",
+               "routed_qps"], rows)
+
+    if emit:
+        with open(emit, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"  [bench] {emit}")
+
+    if check:
+        pq = out["backends"]["ivfpq"]
+        assert (pq["fused"]["p50_route_s"]
+                <= pq["host_gather"]["p50_route_s"]), (
+            f"fused path regressed past the host-gather baseline: "
+            f"{pq['fused']['p50_route_s']}s > "
+            f"{pq['host_gather']['p50_route_s']}s")
+        last = out["streaming"]["points"][-1]
+        assert (last["fused_probed_p50_s"]
+                <= last["host_exact_scan_p50_s"] * 1.05), (
+            "probed delta tier slower than the exact scan it replaces: "
+            f"{last}")
+        print("  serving --check: fused <= host_gather OK, "
+              "probed <= exact-scan OK")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small corpus (CI shapes)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert fused p50 <= host-gather p50 (regression "
+                         "guard)")
+    ap.add_argument("--emit-bench", default=None, metavar="PATH",
+                    help="write the machine-readable snapshot, e.g. "
+                         "BENCH_serving.json")
+    ap.add_argument("--no-shard", action="store_true",
+                    help="disable host-device batch sharding")
+    args = ap.parse_args()
+    run(emit=args.emit_bench, quick=args.quick, check=args.check)

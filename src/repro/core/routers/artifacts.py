@@ -34,13 +34,17 @@ import numpy as np
 
 from .spec import FAMILIES, router_config, spec_of
 
-#: 3 adds the streaming tier (`DynamicIVFIndex`: base index under a
+#: 4 stores the packed PQ code lists CODE-MAJOR (``codes_cm`` is
+#: ``(C, MB, L)`` — the lane-efficient layout the serving hot path and the
+#: reworked Pallas ADC kernel read directly); version<=3 artifacts hold the
+#: old row-major ``(C, L, MB)`` blocks and are transposed once at load.
+#: 3 added the streaming tier (`DynamicIVFIndex`: base index under a
 #: ``base/`` prefix, pending delta rows/assignments, delta_cap, append and
 #: re-cluster counters, and the re-build parameters a compaction replays);
 #: 2 added the IVF-PQ index fields (anchors, packed codes, codebooks, cold
-#: raw rows); version-1/2 artifacts remain readable — restore is field-set
-#: driven, not version-switched.
-FORMAT_VERSION = 3
+#: raw rows); version-1/2/3 artifacts remain readable — restore is field-set
+#: driven, not version-switched, plus the one layout transpose above.
+FORMAT_VERSION = 4
 MIN_FORMAT_VERSION = 1
 _IVF_FIELDS = ("centroids", "sup_cm", "ids_cm", "inv_cm", "n_rows")
 _IVFPQ_FIELDS = ("centroids", "anchors", "codes_cm", "ids_cm", "inv_cm",
@@ -111,7 +115,10 @@ def _scalar(arr):
 def _collect_dynamic(val, attr, out):
     """Serialize a `DynamicIVFIndex`: base fields under ``base/``, the delta
     tier verbatim (bitwise reload of pending rows), counters, and the
-    re-build parameters a post-load re-cluster must replay."""
+    re-build parameters a post-load re-cluster must replay.  A background
+    compaction still building is joined first — the artifact must capture
+    one consistent (base, delta) pair, not a mid-swap hybrid."""
+    val.join_recluster()
     for f in _index_fields(val.base):
         out[f"{attr}/base/{f}"] = np.asarray(getattr(val.base, f))
     out[f"{attr}/delta_x"] = np.asarray(val.delta_x, np.float32)
@@ -249,7 +256,16 @@ def load_router(path):
                          f"registered in this build")
     router = fam.cls(**manifest["config"])
     with np.load(path / "state.npz") as npz:
-        router.load_state_dict({k: npz[k] for k in npz.files})
+        state = {k: npz[k] for k in npz.files}
+    if version < 4:
+        # version<=3 packed PQ lists are row-major (C, L, MB); the live
+        # layout is code-major (C, MB, L) — transpose once at load so old
+        # artifacts keep reproducing predict_utility bitwise
+        for key in list(state):
+            if key.endswith("codes_cm"):
+                state[key] = np.ascontiguousarray(
+                    np.swapaxes(state[key], 1, 2))
+    router.load_state_dict(state)
     router.model_names = list(manifest["model_names"])
     router.embed_dim = manifest["embedding_dim"]
     router.fit_seed = manifest["fit_seed"]

@@ -24,11 +24,19 @@ When a mesh is supplied, all backends go through their mesh-sharded
 variants in `repro.core.sharded_knn` (support rows / cluster lists sharded
 across every device, per-device top-k merged with one tiny all-gather).
 
+Execution backends (``backend=``, default per index): IVF-PQ serves through
+the FUSED single-dispatch path (probe + ADC + shortlist + exact re-rank in
+one jitted call), raw IVF through the host inverted traversal whose
+read-each-list-once BLAS is its fastest CPU operating point; ``host`` /
+``tiles`` / ``pallas`` stay addressable for debugging and TPU runs.
+
 Streaming updates: ``partial_fit(X, scores, costs)`` appends observations to
 the support arrays — for a non-parametric router that IS the whole training
 step.  With an approximate backend the rows also land in a
-`DynamicIVFIndex` delta tier (exact-scanned, merged into every shortlist)
-that is compacted by a full re-cluster once it exceeds ``delta_cap``;
+`DynamicIVFIndex` delta tier (probed per-centroid sub-lists on the fused
+backend, exact-scanned on the staged ones) that is compacted by a full
+re-cluster once it exceeds ``delta_cap`` — synchronously, or on a
+background thread (``recluster="background"``) with an atomic index swap;
 ``online=True`` (spec ``@online=1,delta_cap=..``) wraps the index at fit
 time, otherwise the wrap happens lazily on the first ``partial_fit``.
 
@@ -36,17 +44,26 @@ time, otherwise the wrap happens lazily on the first ``partial_fit``.
 across backends: approximate retrieval can return fewer than k valid
 neighbours on pathological probe sets (index -1 slots), which are excluded
 from averages and votes.  ``predict_with_confidence`` fuses utility
-prediction and the §8 confidence diagnostics over ONE retrieval — the
-serving layer's hot path, where running them separately would double the
-per-request retrieval cost.
+prediction and the §8 confidence diagnostics over ONE retrieval;
+``serve_fused`` goes further and runs retrieval, utility, confidence, AND
+the per-request-lambda selection in ONE device dispatch — the serving
+layer's hot path (`RouterService.route_fused`), bit-identical to the
+staged calls because both share the same jitted kernels.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.knn_ivf.ops import (DEFAULT_DELTA_CAP, DEFAULT_NPROBE,
                                        DEFAULT_RERANK, DynamicIVFIndex,
+                                       _fused_dyn_ivf_topk_impl,
+                                       _fused_dyn_ivfpq_topk_impl,
+                                       _fused_ivf_topk_impl,
+                                       _fused_ivfpq_topk_impl,
                                        build_ivf_index, build_ivfpq_index,
                                        ivf_topk, ivfpq_topk)
 from repro.kernels.knn_topk.ops import knn_topk
@@ -55,6 +72,98 @@ from .base import Router, gold_labels, normalize_rows
 from .spec import register
 
 _INDEXES = ("exact", "ivf", "ivfpq")
+_BACKENDS = (None, "fused", "host", "tiles", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# jitted neighbour->decision kernels, shared by the legacy multi-dispatch
+# path and the fused single-dispatch serving path so both produce BITWISE
+# identical numbers (the fused path calls these as inner jits, which XLA
+# keeps as preserved subcomputations)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("weights", "temperature"))
+def _utility_jit(sims, idx, S, C, *, weights: str, temperature: float):
+    """Neighbour-weighted utility/cost estimates from one retrieval's
+    (sims, idx) — the jnp twin of the old numpy `_utility_from`."""
+    valid = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    s_nb = jnp.take(S, safe, axis=0)                         # (Q, k, M)
+    c_nb = jnp.take(C, safe, axis=0)
+    if weights == "softmax":
+        fin = jnp.where(valid, sims, -jnp.inf)
+        mx = jnp.max(fin, axis=1, keepdims=True)
+        mx = jnp.where(jnp.isfinite(mx), mx, 0.0)            # all-invalid
+        w = jnp.exp(temperature * (fin - mx))
+        w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
+    else:
+        w = valid / jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+    s_hat = jnp.einsum("qk,qkm->qm", w.astype(jnp.float32), s_nb,
+                       preferred_element_type=jnp.float32)
+    c_hat = jnp.einsum("qk,qkm->qm", w.astype(jnp.float32), c_nb,
+                       preferred_element_type=jnp.float32)
+    return s_hat, c_hat
+
+
+@jax.jit
+def _confidence_jit(sims, idx, S):
+    """(kth_sim, neighbour_agreement) from one retrieval's results — the
+    jnp twin of the old numpy `_confidence_from` (agreement = mode fraction
+    of the neighbours' best-model votes among valid neighbours).
+
+    The k-th similarity is taken as a row MIN, not ``sims[:, -1]``:
+    retrieval scores arrive sorted descending so the two are bit-identical,
+    but when this kernel is inlined into the fused serving jit a SLICE of a
+    `lax.top_k` output defeats XLA:CPU's TopK rewrite (the algebraic
+    simplifier merges slice-of-slice and the pattern no longer matches),
+    silently demoting the whole shortlist selection to a generic variadic
+    sort — a ~20x regression on the hot path."""
+    kth = jnp.min(sims, axis=1)
+    valid = idx >= 0
+    best = jnp.argmax(jnp.take(S, jnp.maximum(idx, 0), axis=0), axis=2)
+    counts = jnp.sum((best[..., None] == jnp.arange(S.shape[1]))
+                     & valid[..., None], axis=1)             # (Q, M)
+    agree = (counts.max(axis=1).astype(jnp.float32)
+             / jnp.maximum(valid.sum(axis=1), 1).astype(jnp.float32))
+    return kth, agree
+
+
+@jax.jit
+def _select_jit(s_hat, c_hat, lam):
+    """Per-request-lambda utility argmax — the single decision kernel every
+    routing path (legacy batched serving and the fused path) shares."""
+    util = s_hat - lam[:, None] * c_hat
+    return jnp.argmax(util, axis=1), util
+
+
+@functools.partial(jax.jit, static_argnames=("weights", "temperature"))
+def _serve_tail_jit(sims, idx, S, C, lam, *, weights: str,
+                    temperature: float):
+    """Retrieval results -> (choice, s_hat, c_hat, kth, agree) in ONE
+    dispatch: utility, confidence, and per-request-lambda selection fused.
+    The inner calls are the same jitted kernels the legacy path runs
+    separately, preserved as subcomputations — identical numerics, one
+    device sync instead of three."""
+    s_hat, c_hat = _utility_jit(sims, idx, S, C, weights=weights,
+                                temperature=temperature)
+    kth, agree = _confidence_jit(sims, idx, S)
+    choice, _ = _select_jit(s_hat, c_hat, lam)
+    return choice, s_hat, c_hat, kth, agree
+
+
+@functools.partial(jax.jit, static_argnames=("search", "weights",
+                                             "temperature"))
+def _serve_fused_jit(queries, lam, S, C, *search_args, search, weights: str,
+                     temperature: float):
+    """The whole routed batch in ONE device dispatch: retrieval (the
+    jitted single-dispatch search this router's index supports), neighbour-
+    weighted utility, confidence diagnostics, and per-request-lambda
+    selection.  ``search`` is a cached `functools.partial` of a module-level
+    jitted search (static by identity, so the jit cache is stable across
+    calls)."""
+    sims, idx = search(queries, *search_args)
+    return _serve_tail_jit(sims, idx, S, C, lam, weights=weights,
+                           temperature=temperature)
 
 
 @register("knn", k_param="k", default_ks=(10, 100), supports_ivf=True,
@@ -70,10 +179,14 @@ class KNNRouter(Router):
                  nprobe: int = DEFAULT_NPROBE,
                  m: int | None = None, nbits: int = 8,
                  rerank: int = DEFAULT_RERANK,
-                 online: bool = False, delta_cap: int = DEFAULT_DELTA_CAP):
+                 online: bool = False, delta_cap: int = DEFAULT_DELTA_CAP,
+                 backend: str | None = None):
         if index not in _INDEXES:
             raise ValueError(f"index must be one of {_INDEXES}, "
                              f"got {index!r}")
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {backend!r}")
         self.k = k
         self.weights = weights
         self.use_pallas = use_pallas
@@ -87,8 +200,24 @@ class KNNRouter(Router):
         self.rerank = rerank
         self.online = bool(online)
         self.delta_cap = int(delta_cap)
+        self.backend = backend
+        self._dev = {}           # device-resident (S, C) + serve-path cache
         suffix = {"exact": "", "ivf": " IVF", "ivfpq": " IVF-PQ"}[index]
         self.name = f"kNN (k={k}){suffix}"
+
+    @property
+    def exec_backend(self) -> str:
+        """Execution backend of the approximate tiers.  Explicit ``backend``
+        wins; ``use_pallas`` selects the kernel; otherwise IVF-PQ defaults
+        to the fused single-dispatch path (its host traversal is the
+        reference/debug fallback) while raw IVF keeps the host inverted
+        traversal, whose read-each-list-once BLAS is the faster operating
+        point for raw float lists."""
+        if self.backend is not None:
+            return self.backend
+        if self.use_pallas:
+            return "pallas"
+        return "fused" if self.index == "ivfpq" else "host"
 
     # ---- fit = store the support set (+ coarse quantizer / PQ codebooks) --
     def _index_build_kw(self, seed: int) -> dict:
@@ -101,6 +230,7 @@ class KNNRouter(Router):
 
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
         self._record_fit(ds, seed)
+        self._dev = {}
         X, S, C = ds.part("train")
         self._X = normalize_rows(X)
         self._S = S.astype(np.float32)
@@ -129,8 +259,11 @@ class KNNRouter(Router):
         ``recluster``: ``"auto"`` (default) compacts the index once the
         delta tier exceeds ``delta_cap`` — the amortized policy; ``False``
         never compacts (callers control timing); ``True`` forces a compaction
-        now.  A non-online approximate index is wrapped into a
-        `DynamicIVFIndex` lazily on the first call."""
+        now; ``"background"`` is the serving policy — same trigger as
+        ``"auto"`` but the k-means rebuild runs on a daemon thread with an
+        atomic index swap, so this call (and every query meanwhile) returns
+        without waiting on it.  A non-online approximate index is wrapped
+        into a `DynamicIVFIndex` lazily on the first call."""
         if getattr(self, "_S", None) is None:
             raise RuntimeError("KNNRouter.partial_fit() called before fit(); "
                                "the streaming step appends to a fitted "
@@ -152,6 +285,7 @@ class KNNRouter(Router):
         self._X = np.concatenate([self._X, Xn])
         self._S = np.concatenate([self._S, S])
         self._C = np.concatenate([self._C, C])
+        self._dev = {}
         if getattr(self, "_train_best", None) is not None:
             # keep the selection vote consistent: extend the gold labels at
             # the lambda fit_selection derived them with
@@ -168,6 +302,8 @@ class KNNRouter(Router):
                 self._ivf.recluster()
             elif recluster == "auto":
                 self._ivf.maybe_recluster()
+            elif recluster == "background":
+                self._ivf.maybe_recluster(sync=False)
         return self
 
     @property
@@ -188,7 +324,7 @@ class KNNRouter(Router):
                 sims, idx = ivfpq_topk(jnp.asarray(q), self._ivf, k,
                                        nprobe=self.nprobe,
                                        rerank=self.rerank,
-                                       use_pallas=self.use_pallas)
+                                       backend=self.exec_backend)
         elif self.index == "ivf":
             if self.mesh is not None:
                 from ..sharded_knn import sharded_ivf_topk
@@ -197,7 +333,7 @@ class KNNRouter(Router):
             else:
                 sims, idx = ivf_topk(jnp.asarray(q), self._ivf, k,
                                      nprobe=self.nprobe,
-                                     use_pallas=self.use_pallas)
+                                     backend=self.exec_backend)
         elif self.mesh is not None:
             from ..sharded_knn import sharded_knn_topk
             sims, idx = sharded_knn_topk(jnp.asarray(q), jnp.asarray(self._X),
@@ -208,22 +344,24 @@ class KNNRouter(Router):
         return np.asarray(sims), np.asarray(idx)
 
     # ---- utility ----
+    def _SC_dev(self):
+        """Device-resident (S, C) support score/cost arrays, cached so the
+        per-batch serving path never re-uploads them (invalidated by
+        fit/partial_fit)."""
+        sc = self._dev.get("SC")
+        if sc is None or sc[0].shape != self._S.shape:
+            sc = (jnp.asarray(self._S), jnp.asarray(self._C))
+            self._dev["SC"] = sc
+        return sc
+
     def _utility_from(self, sims: np.ndarray, idx: np.ndarray):
-        """Neighbour-weighted utility/cost estimates from one retrieval."""
-        valid = idx >= 0                        # IVF may return short lists
-        s_nb = self._S[np.maximum(idx, 0)]      # (Q, k, M)
-        c_nb = self._C[np.maximum(idx, 0)]
-        if self.weights == "softmax":
-            fin = np.where(valid, sims, -np.inf)
-            mx = fin.max(1, keepdims=True)
-            mx = np.where(np.isfinite(mx), mx, 0.0)   # all-invalid guard
-            w = np.exp(self.temperature * (fin - mx))
-            w /= np.maximum(w.sum(1, keepdims=True), 1e-12)
-        else:
-            w = valid / np.maximum(valid.sum(1, keepdims=True), 1)
-        s_hat = np.einsum("qk,qkm->qm", w, s_nb)
-        c_hat = np.einsum("qk,qkm->qm", w, c_nb)
-        return s_hat, c_hat
+        """Neighbour-weighted utility/cost estimates from one retrieval —
+        the same jitted kernel the fused serving path inlines."""
+        S, C = self._SC_dev()
+        s_hat, c_hat = _utility_jit(jnp.asarray(sims), jnp.asarray(idx), S, C,
+                                    weights=self.weights,
+                                    temperature=float(self.temperature))
+        return np.asarray(s_hat), np.asarray(c_hat)
 
     def predict_utility(self, X: np.ndarray):
         sims, idx = self._neighbors(X)
@@ -252,15 +390,11 @@ class KNNRouter(Router):
 
     # ---- practitioner diagnostics (§8): per-query confidence ----
     def _confidence_from(self, sims: np.ndarray, idx: np.ndarray):
-        """(kth_sim, neighbour_agreement) from one retrieval's results."""
-        kth = sims[:, -1]
-        valid = idx >= 0
-        best = np.argmax(self._S[np.maximum(idx, 0)]
-                         - 0.0 * self._C[np.maximum(idx, 0)], axis=2)  # (Q,k)
-        mode_frac = np.array(
-            [np.bincount(b[v]).max() / max(v.sum(), 1) if v.any() else 0.0
-             for b, v in zip(best, valid)])
-        return kth, mode_frac
+        """(kth_sim, neighbour_agreement) from one retrieval's results —
+        the same jitted kernel the fused serving path inlines."""
+        S, _ = self._SC_dev()
+        kth, agree = _confidence_jit(jnp.asarray(sims), jnp.asarray(idx), S)
+        return np.asarray(kth), np.asarray(agree)
 
     def confidence(self, X: np.ndarray):
         """Returns (kth_sim, neighbour_agreement) per query: low kth-neighbour
@@ -280,6 +414,166 @@ class KNNRouter(Router):
         kth, agree = self._confidence_from(sims, idx)
         return s_hat, c_hat, kth, agree
 
+    # ---- fused single-dispatch serving path ----
+    def _fused_search(self):
+        """(search_partial, array_args) for the single-dispatch retrieval
+        this router's configuration supports, or (None, None) when retrieval
+        needs a host stage (raw-IVF host traversal, pallas tile planning, an
+        index-sharding mesh).  The partial is cached per static
+        configuration so the jit cache is keyed by a stable object."""
+        if self.mesh is not None:
+            return None, None
+        if self.index != "exact" and self.exec_backend != "fused":
+            return None, None
+        if self.index == "exact":
+            k = min(self.k, len(self._X))
+            key = ("exact", k, self.use_pallas)
+            if self._dev.get("search_key") != key:
+                self._dev["search"] = functools.partial(
+                    knn_topk.__wrapped__, k=k, use_pallas=self.use_pallas,
+                    interpret=True)
+                self._dev["search_key"] = key
+            Xd = self._dev.get("X")
+            if Xd is None or Xd.shape != self._X.shape:
+                Xd = jnp.asarray(self._X)
+                self._dev["X"] = Xd
+            return self._dev["search"], (Xd,)
+
+        ivf = self._ivf
+        dyn = isinstance(ivf, DynamicIVFIndex)
+        if dyn:
+            # snapshot (base, delta state) under the index lock so a
+            # background re-cluster swap cannot pair the new base with a
+            # stale delta tier (or vice versa) mid-assembly
+            with ivf._lock:
+                base = ivf.base
+                delta = ivf.delta_rows
+                st = ivf.fused_state() if delta else None
+        else:
+            base, delta, st = ivf, 0, None
+        nprobe = max(1, min(self.nprobe, base.n_clusters))
+        if self.index == "ivfpq":
+            lc = st["dl_codes"].shape[1] if delta else 0
+            cand = nprobe * (base.list_size + lc)
+            n = base.n_rows + delta
+            k = min(self.k, n, cand)
+            kk = (min(max(self.rerank, 1) * k, n, cand)
+                  if self.rerank else 0)
+            key = ("ivfpq", delta > 0, k, kk, nprobe, base.m, base.nbits, lc)
+            if self._dev.get("search_key") != key:
+                fn = (_fused_dyn_ivfpq_topk_impl if delta
+                      else _fused_ivfpq_topk_impl)
+                self._dev["search"] = functools.partial(
+                    fn, k=k, kk=kk, nprobe=nprobe, m=base.m,
+                    nbits=base.nbits)
+                self._dev["search_key"] = key
+            args = (base.centroids, base.codes_rm, base.ids_cm, base.inv_cm,
+                    base.anchors, base.codebooks)
+            if delta:
+                args += (st["dl_codes"], st["dl_ids"], st["dl_inv"],
+                         st["sup_all"], st["inv_all"])
+            else:
+                args += (base.sup_flat, base.inv_flat)
+            return self._dev["search"], args
+
+        lc = st["dl_sup"].shape[1] if delta else 0
+        k = min(self.k, base.n_rows + delta,
+                nprobe * (base.list_size + lc))
+        key = ("ivf", delta > 0, k, nprobe, lc)
+        if self._dev.get("search_key") != key:
+            fn = _fused_dyn_ivf_topk_impl if delta else _fused_ivf_topk_impl
+            self._dev["search"] = functools.partial(fn, k=k, nprobe=nprobe)
+            self._dev["search_key"] = key
+        args = (base.centroids, base.sup_cm, base.ids_cm, base.inv_cm)
+        if delta:
+            args += (st["dl_sup"], st["dl_ids"], st["dl_inv"])
+        return self._dev["search"], args
+
+    def serve_fused(self, X: np.ndarray, lam: np.ndarray, qmesh=None):
+        """One routed batch, ONE device dispatch: retrieval + neighbour
+        utility + confidence + per-request-lambda selection inside a single
+        jit (`_serve_fused_jit`).  Returns numpy
+        (choice, s_hat, c_hat, kth_sim, agreement) — bitwise identical to
+        running `predict_with_confidence` and the batched utility argmax
+        separately, because both paths call the same jitted kernels.
+
+        Backends that need a host stage (raw-IVF host traversal, pallas
+        tile planning, an index-sharding mesh) keep their retrieval step
+        and fuse everything after it into one dispatch (`_serve_tail_jit`).
+
+        ``qmesh``: optional mesh to shard the BATCH axis over (replicated
+        index) — bitwise-identical results, near-linear scaling for the
+        gather-bound fused search."""
+        lam_j = jnp.asarray(np.asarray(lam, np.float32))
+        S, C = self._SC_dev()
+        search, args = self._fused_search()
+        if search is None:
+            sims, idx = self._neighbors(X)
+            out = _serve_tail_jit(jnp.asarray(sims), jnp.asarray(idx), S, C,
+                                  lam_j, weights=self.weights,
+                                  temperature=float(self.temperature))
+            return tuple(np.asarray(o) for o in out)
+        q = jnp.asarray(normalize_rows(np.asarray(X, np.float32)))
+        if qmesh is None:
+            out = _serve_fused_jit(q, lam_j, S, C, *args, search=search,
+                                   weights=self.weights,
+                                   temperature=float(self.temperature))
+        else:
+            out = self._serve_sharded(qmesh, q, lam_j, S, C, search, args)
+        return tuple(np.asarray(o) for o in out)
+
+    def _serve_sharded(self, qmesh, q, lam, S, C, search, args):
+        """`_serve_fused_jit` with the batch sharded across ``qmesh`` —
+        every per-query lane of the fused path is independent, so shard_map
+        over the query axis is exact (verified bitwise in tests).  The
+        wrapped callable is cached per (mesh, search), and the replicated
+        index arrays are `device_put` onto the mesh ONCE per index version
+        — passing host-committed arrays straight in would re-replicate tens
+        of MB on every call, which is slower than not sharding at all."""
+        import jax.experimental.shard_map as shmap
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        key = ("qmesh", qmesh, search, self.weights, self.temperature)
+        cached = self._dev.get("qmesh_fn")
+        if self._dev.get("qmesh_key") != key or cached is None:
+            axes = tuple(qmesh.axis_names)
+
+            def local(qs, lams, *arrs):
+                sims, idx = search(qs, *arrs[:-2])
+                return _serve_tail_jit(sims, idx, arrs[-2], arrs[-1], lams,
+                                       weights=self.weights,
+                                       temperature=float(self.temperature))
+
+            specs = (P(axes), P(axes)) + tuple(P() for _ in args) + (P(), P())
+            cached = jax.jit(shmap.shard_map(
+                local, mesh=qmesh, in_specs=specs,
+                out_specs=tuple(P(axes) for _ in range(5)),
+                check_rep=False))
+            self._dev["qmesh_fn"] = cached
+            self._dev["qmesh_key"] = key
+        rep = NamedSharding(qmesh, P())
+        src = (*args, S, C)
+        prev = self._dev.get("qmesh_args_src")
+        # identity comparison against RETAINED source arrays (not bare ids:
+        # a freed wrapper's address can be reused by a new array, which
+        # would serve stale pre-compaction replicas)
+        if (prev is None or self._dev.get("qmesh_args_mesh") is not qmesh
+                or len(prev) != len(src)
+                or any(a is not b for a, b in zip(prev, src))):
+            self._dev["qmesh_args"] = tuple(jax.device_put(a, rep)
+                                            for a in src)
+            self._dev["qmesh_args_src"] = src
+            self._dev["qmesh_args_mesh"] = qmesh
+        rep_args = self._dev["qmesh_args"]
+        n_dev = int(np.prod([qmesh.shape[a] for a in qmesh.axis_names]))
+        qn = q.shape[0]
+        pad = (-qn) % n_dev
+        if pad:
+            q = jnp.pad(q, ((0, pad), (0, 0)))
+            lam = jnp.pad(lam, (0, pad))
+        with qmesh:
+            out = cached(q, lam, *rep_args)
+        return tuple(o[:qn] for o in out)
+
     # ---- artifact contract: don't store the support rows twice ----
     def state_dict(self):
         """The approximate indexes already hold every support row (IVF-PQ's
@@ -294,6 +588,7 @@ class KNNRouter(Router):
 
     def load_state_dict(self, state):
         super().load_state_dict(state)
+        self._dev = {}
         if (getattr(self, "_X", None) is None
                 and getattr(self, "_ivf", None) is not None):
             if isinstance(self._ivf, DynamicIVFIndex):

@@ -42,7 +42,7 @@ from jax.experimental.shard_map import shard_map
 from repro.kernels.knn_ivf.ops import (DEFAULT_NPROBE, DEFAULT_RERANK,
                                        DynamicIVFIndex, IVFIndex, IVFPQIndex,
                                        _rerank_exact)
-from repro.kernels.knn_ivf.pq import unpack_codes_jnp
+from repro.kernels.knn_ivf.pq import unpack_codes_jnp_cm
 from repro.kernels.knn_ivf.ref import ivf_probe
 from repro.kernels.knn_topk.ops import knn_topk
 from repro.kernels.knn_topk.ref import knn_topk_reference
@@ -211,7 +211,7 @@ def sharded_ivfpq_topk(queries, index: IVFPQIndex, k: int, mesh: Mesh,
         return index.merge_delta(queries, sc, ix, k)
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    C, L, MB = index.codes_cm.shape
+    C, MB, L = index.codes_cm.shape
     D = index.centroids.shape[1]
     m, nbits = index.m, index.nbits
     kb = 2 ** nbits
@@ -238,12 +238,12 @@ def sharded_ivfpq_topk(queries, index: IVFPQIndex, k: int, mesh: Mesh,
         lut = jnp.einsum("qmd,mkd->qmk", qf.reshape(qn, m, D // m), cbs,
                          preferred_element_type=jnp.float32)
         lut = lut.reshape(qn, m * kb)
-        codes = unpack_codes_jnp(jnp.take(c_shard[0], locc, axis=0),
-                                 m, nbits)                   # (Q, P, L, m)
+        codes = unpack_codes_jnp_cm(jnp.take(c_shard[0], locc, axis=0),
+                                    m, nbits)                # (Q, P, m, L)
         # per-subspace accumulation: peak memory (Q, P*L), not (Q, P*L*m)
         sims = jnp.zeros((qn, nprobe * L), jnp.float32)
         for j in range(m):
-            cj = codes[..., j].reshape(qn, nprobe * L) + j * kb
+            cj = codes[:, :, j, :].reshape(qn, nprobe * L) + j * kb
             sims = sims + jnp.take_along_axis(lut, cj, axis=1)
         sims = sims.reshape(qn, nprobe, L)                   # (Q, P, L)
         # anchors are replicated, so gather by GLOBAL probe id (unlike the
@@ -264,7 +264,7 @@ def sharded_ivfpq_topk(queries, index: IVFPQIndex, k: int, mesh: Mesh,
         top_ix = jnp.where(jnp.isfinite(top_sc), top_ix, -1)
         return top_sc, top_ix
 
-    codes4 = codes_cm.reshape(n_shards, cp, L, MB)
+    codes4 = codes_cm.reshape(n_shards, cp, MB, L)
     ids3 = ids_cm.reshape(n_shards, cp, L)
     inv3 = inv_cm.reshape(n_shards, cp, L)
     fn = shard_map(local, mesh=mesh,

@@ -26,25 +26,40 @@ Per-query cost is O(nprobe * L * D) against the brute-force O(N * D);
 
 ``build_ivfpq_index`` / ``ivfpq_topk`` add the product-quantized tier on the
 SAME coarse partition and tiling plan: hot lists hold packed uint8 codes
-(`pq.py`) scored by ADC table lookups (host gathers / jitted tiles /
-`pq_kernel.py`), and a shortlist of ``rerank * k`` ADC candidates is
-re-scored exactly against the raw rows kept as a flat cold tier — two-stage
-search that trades ~16x hot HBM for a ~rerank*k-row gather per query.
+(`pq.py`, stored CODE-MAJOR ``(C, MB, L)`` so the long L axis sits in the
+lane dimension for compiled DMA) scored by ADC table lookups (host gathers
+/ jitted tiles / `pq_kernel.py`), and a shortlist of ``rerank * k`` ADC
+candidates is re-scored exactly against the raw rows kept as a flat cold
+tier — two-stage search that trades ~16x hot HBM for a ~rerank*k-row gather
+per query.
+
+``backend="fused"`` is the serving hot path: probe, ADC scan, shortlist
+selection, AND the exact re-rank run inside ONE jitted call — no host-side
+tile planning, no second host->device hop for the re-rank gather.  The
+router/serving layers default to it for IVF-PQ; the ``host`` traversal
+remains the CPU reference/debug fallback and stays the default of the
+ops-level entry points so oracle tests keep their exact semantics.
 
 ``DynamicIVFIndex`` converts either frozen index into a STREAMING one: new
-rows are assigned to their nearest coarse centroid and accumulate in a flat
-exact-scanned delta tier that every ``ivf_topk`` / ``ivfpq_topk`` call
-merges into its shortlist (appended rows are retrieved with exact scores,
-so the delta tier can only help recall); ``recluster()`` compacts the delta
-into a freshly re-trained coarse partition (and PQ codebooks) once it
-exceeds ``delta_cap`` — an amortized rebuild that the query path itself
-never waits on.
+rows are assigned to their nearest coarse centroid and accumulate in a
+delta tier that every ``ivf_topk`` / ``ivfpq_topk`` call merges into its
+shortlist.  The host/tiles/pallas backends scan the delta exactly (appended
+rows are retrieved with exact scores, so the tier can only help recall);
+the fused backend instead PROBES per-centroid delta sub-lists inside the
+same single dispatch — delta rows are laid out cluster-major (and, over a
+PQ base, encoded with the existing codebooks) so the streaming index query
+cost stays at the base index's operating point instead of adding an
+O(Q * delta) exact scan.  ``recluster()`` compacts the delta into a freshly
+re-trained coarse partition (and PQ codebooks) once it exceeds
+``delta_cap`` — synchronously, or on a background thread with an atomic
+index swap (``sync=False``) so compaction never stalls a serving query.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -113,10 +128,16 @@ class IVFPQIndex:
     only as the flat cold tier ``sup_flat`` that exact re-ranking reads for
     a shortlist of ~rerank*k rows per query (see `pq.py` for the ADC math).
     Device arrays feed the Pallas/tiles/sharded paths; host mirrors feed the
-    CPU traversal without a device round-trip."""
+    CPU traversal without a device round-trip.
+
+    The packed code lists are stored CODE-MAJOR ``(C, MB, L)``: the long
+    list axis L sits in the minor (lane) dimension, so a compiled per-probe
+    block DMA moves MB lane-aligned rows of L bytes instead of L rows of MB
+    bytes — the lane-efficient layout the Pallas ADC kernel is built around
+    (`pq_kernel.py`)."""
     centroids: jnp.ndarray     # (C, D) f32, unit-norm coarse quantizer
     anchors: jnp.ndarray       # (C, D) f32, raw-space list means
-    codes_cm: jnp.ndarray      # (C, L, MB) u8, packed PQ codes, 0 padding
+    codes_cm: jnp.ndarray      # (C, MB, L) u8, packed PQ codes, 0 padding
     ids_cm: jnp.ndarray        # (C, L) i32, -1 padding
     inv_cm: jnp.ndarray        # (C, L) f32, EXACT 1/||row||, 0 padding
     codebooks: jnp.ndarray     # (m, 2^nbits, D/m) f32
@@ -137,17 +158,47 @@ class IVFPQIndex:
 
     @property
     def list_size(self) -> int:
-        return self.codes_cm.shape[1]
+        return self.codes_cm.shape[2]
 
     @property
     def code_bytes(self) -> int:
         """Packed bytes per row (m*nbits/8)."""
-        return self.codes_cm.shape[2]
+        return self.codes_cm.shape[1]
 
     def rows(self) -> np.ndarray:
         """Raw support rows in ORIGINAL row order — the flat cold tier is
         already stored that way (same array, same bytes)."""
         return self.sup_flat_h
+
+    @functools.cached_property
+    def codes_rm_h(self) -> np.ndarray:
+        """Row-major ``(C, L, MB)`` HOST mirror of the packed lists,
+        derived once and cached — the CPU traversal reads per-row codes,
+        so re-transposing each probed cluster's block on every call would
+        pay an O(L*MB) copy per probe per query batch."""
+        return np.ascontiguousarray(self.codes_h.transpose(0, 2, 1))
+
+    @functools.cached_property
+    def codes_rm(self) -> jnp.ndarray:
+        """Row-major ``(C, L, MB)`` device mirror of the packed lists,
+        derived once and cached.  The canonical storage (and the artifact)
+        is code-major — the Pallas kernel's lane-aligned DMA layout — but
+        the fused XLA path's flat-take ADC scan wants the m subspace codes
+        of a row adjacent (gather + reduce over the MINOR axis); scanning
+        the code-major blocks directly costs ~3x in strided reduces.  At
+        ~m bytes/row the mirror is a rounding error next to the cold
+        tier."""
+        return jnp.asarray(self.codes_rm_h)
+
+    @functools.cached_property
+    def inv_flat(self) -> jnp.ndarray:
+        """Exact stored inverse row norms in ORIGINAL row order (N,) — the
+        fused path's re-rank multiplies by these instead of re-reducing the
+        gathered rows (one (Q, kk) gather replaces a (Q, kk, D) square-sum),
+        and they are float-identical to the per-list ``inv_cm`` entries."""
+        inv = np.zeros(self.n_rows, np.float32)
+        inv[self.ids_h[self.ids_h >= 0]] = self.inv_h[self.ids_h >= 0]
+        return jnp.asarray(inv)
 
     @functools.cached_property
     def cb_mat(self) -> jnp.ndarray:
@@ -303,8 +354,9 @@ def assemble_ivfpq(centroids: np.ndarray, anchors: np.ndarray,
                    sup_flat: np.ndarray, n_rows: int, m: int,
                    nbits: int) -> IVFPQIndex:
     """Wrap the serializable arrays into an `IVFPQIndex` (device views plus
-    host mirrors).  Shared by `build_ivfpq_index` and the artifact loader so
-    a reloaded index is byte-identical to a freshly built one."""
+    host mirrors).  ``codes_cm`` arrives CODE-MAJOR ``(C, MB, L)``.  Shared
+    by `build_ivfpq_index` and the artifact loader so a reloaded index is
+    byte-identical to a freshly built one."""
     return IVFPQIndex(
         jnp.asarray(centroids), jnp.asarray(anchors), jnp.asarray(codes_cm),
         jnp.asarray(ids_cm), jnp.asarray(inv_cm), jnp.asarray(codebooks),
@@ -349,12 +401,13 @@ def build_ivfpq_index(support, n_clusters: int | None = None,
     codes_all = pqmod.pack_codes(pqmod.encode_pq(residuals, codebooks), nbits)
 
     mb = codes_all.shape[1]
-    codes_cm = np.zeros((c, lsz, mb), np.uint8)
+    # code-major hot lists: (C, MB, L) — the list axis is minor/lane-aligned
+    codes_cm = np.zeros((c, mb, lsz), np.uint8)
     ids_cm = np.full((c, lsz), -1, np.int32)
     inv_cm = np.zeros((c, lsz), np.float32)
     at = 0
     for ci, rows in enumerate(lists):
-        codes_cm[ci, :len(rows)] = codes_all[at:at + len(rows)]
+        codes_cm[ci, :, :len(rows)] = codes_all[at:at + len(rows)].T
         ids_cm[ci, :len(rows)] = rows
         inv_cm[ci, :len(rows)] = 1.0 / norms[rows, 0]
         at += len(rows)
@@ -367,6 +420,13 @@ def build_ivfpq_index(support, n_clusters: int | None = None,
 DEFAULT_DELTA_CAP = 4096
 
 
+def _pow2_pad(n: int, floor: int = 8) -> int:
+    """Next power of two >= max(n, floor) — the capacity schedule that keeps
+    the streaming tier's array shapes (and with them the fused path's jit
+    cache) stable across appends, retracing only on doublings."""
+    return max(floor, 1 << max(0, int(math.ceil(math.log2(max(n, 1))))))
+
+
 class DynamicIVFIndex:
     """Streaming wrapper over a frozen `IVFIndex` / `IVFPQIndex`.
 
@@ -374,11 +434,16 @@ class DynamicIVFIndex:
     O(C*D)/row observability record (``delta_occupancy``) of WHERE the
     stream is landing, persisted with the artifact so an operator can see
     whether appends concentrate in few lists (drift) before a compaction —
-    and stores the row in a flat delta tier that `ivf_topk` / `ivfpq_topk`
-    EXACTLY scan and merge into every shortlist — so a freshly appended row is
-    immediately retrievable with an exact cosine score, and the recall of
-    the combined index is bounded below by the frozen base's recall on the
-    base rows (the delta tier cannot lose its own rows).
+    and stores the row in the delta tier.  The staged backends
+    (host/tiles/pallas) EXACTLY scan the flat tier and merge it into every
+    shortlist — a freshly appended row is immediately retrievable with an
+    exact cosine score, and the recall of the combined index is bounded
+    below by the frozen base's recall on the base rows.  The fused backend
+    instead PROBES per-centroid delta sub-lists (``fused_state``) inside
+    its single dispatch, restoring the base index's cost model at a
+    recall profile matching the base search (delta rows are found whenever
+    their assigned centroid is probed — the same condition base rows
+    already live under).
 
     ``recluster()`` folds the delta back into the base by re-training the
     coarse partition (and, for PQ, the residual codebooks) over ALL rows
@@ -409,6 +474,12 @@ class DynamicIVFIndex:
         self.build_kw = dict(build_kw or {})
         self.appends = 0       # rows appended over the index lifetime
         self.reclusters = 0    # compactions run
+        # mutation lock: append / re-cluster swap / fused-state rebuild all
+        # run under it, so a background compaction swaps the base atomically
+        # while queries and appends keep flowing
+        self._lock = threading.RLock()
+        self._rc_thread: threading.Thread | None = None
+        self._fused = None     # cached probed-delta arrays (fused backend)
 
     # ---- delegated shape/meta ----
     @property
@@ -451,13 +522,15 @@ class DynamicIVFIndex:
                              f"got {rows.shape}")
         rn = rows / np.maximum(np.linalg.norm(rows, axis=1, keepdims=True),
                                1e-12)
-        cents = np.asarray(self.base.centroids)
-        assign = np.argmax(rn @ cents.T, axis=1).astype(np.int32)
-        ids = (self.base.n_rows + len(self.delta_x)
-               + np.arange(len(rows), dtype=np.int32))
-        self.delta_x = np.concatenate([self.delta_x, rows])
-        self.delta_assign = np.concatenate([self.delta_assign, assign])
-        self.appends += len(rows)
+        with self._lock:
+            cents = np.asarray(self.base.centroids)
+            assign = np.argmax(rn @ cents.T, axis=1).astype(np.int32)
+            ids = (self.base.n_rows + len(self.delta_x)
+                   + np.arange(len(rows), dtype=np.int32))
+            self.delta_x = np.concatenate([self.delta_x, rows])
+            self.delta_assign = np.concatenate([self.delta_assign, assign])
+            self.appends += len(rows)
+            self._fused = None
         return ids
 
     def delta_occupancy(self) -> np.ndarray:
@@ -472,12 +545,30 @@ class DynamicIVFIndex:
     def needs_recluster(self) -> bool:
         return len(self.delta_x) > self.delta_cap
 
-    def maybe_recluster(self) -> bool:
+    @property
+    def recluster_pending(self) -> bool:
+        """A background compaction is currently building."""
+        t = self._rc_thread
+        return t is not None and t.is_alive()
+
+    def join_recluster(self) -> None:
+        """Wait for a pending background compaction to swap in (no-op when
+        none is running) — the synchronization point tests and artifact
+        serialization use."""
+        t = self._rc_thread
+        if t is not None:
+            t.join()
+            self._rc_thread = None
+
+    def maybe_recluster(self, sync: bool = True) -> bool:
         """Compact iff the delta tier exceeds ``delta_cap``.  Returns whether
-        a re-cluster ran — the amortized policy serving layers call between
-        batches."""
-        if self.needs_recluster:
-            self.recluster()
+        a re-cluster ran (or, with ``sync=False``, was started) — the
+        amortized policy serving layers call between batches.  Pass
+        ``sync=False`` to run the rebuild on a background thread with an
+        atomic swap, so the call returns immediately and no serving query
+        ever waits on k-means."""
+        if self.needs_recluster and not self.recluster_pending:
+            self.recluster(sync=sync)
             return True
         return False
 
@@ -487,29 +578,147 @@ class DynamicIVFIndex:
             return self.base.rows()
         return np.concatenate([self.base.rows(), self.delta_x])
 
-    def recluster(self) -> None:
+    def _build_base(self, rows):
+        """From-scratch build over ``rows`` with the ORIGINAL parameters —
+        the replay that makes a compaction bitwise-equal to a fresh build."""
+        kw = self.build_kw
+        if self.is_pq:
+            return build_ivfpq_index(
+                rows, n_clusters=kw.get("n_clusters"),
+                m=kw.get("m", self.base.m),      # keep the base's geometry
+                nbits=kw.get("nbits", self.base.nbits),
+                seed=kw.get("seed", 0), lane_pad=kw.get("lane_pad", _LANE_PAD))
+        return build_ivf_index(
+            rows, n_clusters=kw.get("n_clusters"), seed=kw.get("seed", 0),
+            lane_pad=kw.get("lane_pad", _LANE_PAD))
+
+    def recluster(self, sync: bool = True) -> None:
         """Re-train the coarse partition (and PQ codebooks on residuals) over
         base + delta rows with the original build parameters, then clear the
         delta tier.  With the same seed this equals a from-scratch build over
         the concatenated rows bitwise (guarded by the seed-determinism
         regression test), so retrieval semantics are unchanged — only the
         approximation quality is restored to the fresh-build operating
-        point."""
-        rows = self.all_rows()
-        kw = self.build_kw
-        if self.is_pq:
-            self.base = build_ivfpq_index(
-                rows, n_clusters=kw.get("n_clusters"),
-                m=kw.get("m", self.base.m),      # keep the base's geometry
-                nbits=kw.get("nbits", self.base.nbits),
-                seed=kw.get("seed", 0), lane_pad=kw.get("lane_pad", _LANE_PAD))
-        else:
-            self.base = build_ivf_index(
-                rows, n_clusters=kw.get("n_clusters"), seed=kw.get("seed", 0),
-                lane_pad=kw.get("lane_pad", _LANE_PAD))
-        self.delta_x = np.zeros((0, self.dim), np.float32)
-        self.delta_assign = np.zeros((0,), np.int32)
-        self.reclusters += 1
+        point.
+
+        ``sync=False`` runs the k-means rebuild on a daemon thread and swaps
+        the compacted base in atomically when it finishes: queries keep
+        reading the old base + full delta meanwhile, and rows appended
+        during the build stay in the delta (re-assigned to the new coarse
+        centroids at swap time).  ``sync=True`` — the default, and the
+        escape hatch determinism tests rely on — blocks until the swap."""
+        if not sync:
+            if self.recluster_pending:
+                return
+            t = threading.Thread(target=self._recluster_job, daemon=True,
+                                 name="repro-ivf-recluster")
+            self._rc_thread = t
+            t.start()
+            return
+        self.join_recluster()
+        self._recluster_job()
+
+    def _recluster_job(self) -> None:
+        """Snapshot -> build (outside the lock) -> atomic swap."""
+        with self._lock:
+            rows = self.all_rows()
+            n_delta_snap = len(self.delta_x)
+        new_base = self._build_base(rows)      # slow: k-means + PQ training
+        with self._lock:
+            tail = self.delta_x[n_delta_snap:]          # appended mid-build
+            self.base = new_base
+            if len(tail):
+                tn = tail / np.maximum(
+                    np.linalg.norm(tail, axis=1, keepdims=True), 1e-12)
+                cents = np.asarray(new_base.centroids)
+                self.delta_assign = np.argmax(tn @ cents.T,
+                                              axis=1).astype(np.int32)
+                self.delta_x = tail
+            else:
+                self.delta_x = np.zeros((0, self.dim), np.float32)
+                self.delta_assign = np.zeros((0,), np.int32)
+            self.reclusters += 1
+            self._fused = None
+
+    # ---- probed delta tier (fused backend) ----
+    def fused_state(self) -> dict:
+        """Cluster-major delta sub-list arrays for the fused single-dispatch
+        backend, built lazily and cached until the next append/compaction.
+
+        Delta rows are grouped per assigned centroid into ``(C, Lc)``-shaped
+        sub-lists (Lc = the max per-centroid occupancy, padded to a power of
+        two so streaming appends retrace the jitted search only on capacity
+        doublings).  Over a PQ base the sub-lists hold codes ENCODED with
+        the existing codebooks (ROW-major ``(C, Lc, MB)`` — the fused scan
+        is their only consumer and gathers rows contiguous, unlike the
+        base lists' code-major storage) so they
+        join the same ADC scan, and ``sup_all`` / ``inv_all`` extend the
+        flat re-rank tier with the raw delta rows at their global ids."""
+        with self._lock:
+            if self._fused is not None:
+                return self._fused
+            c = self.n_clusters
+            nd = len(self.delta_x)
+            d = self.dim
+            counts = np.bincount(self.delta_assign, minlength=c)
+            lc = _pow2_pad(int(counts.max()) if nd else 1)
+            inv_d = (1.0 / np.maximum(np.linalg.norm(self.delta_x, axis=1),
+                                      1e-12)).astype(np.float32)
+            gids = self.base.n_rows + np.arange(nd, dtype=np.int32)
+            dl_ids = np.full((c, lc), -1, np.int32)
+            dl_inv = np.zeros((c, lc), np.float32)
+            members = {ci: np.flatnonzero(self.delta_assign == ci)
+                       for ci in np.unique(self.delta_assign)}
+            for ci, rows in members.items():
+                dl_ids[ci, :len(rows)] = gids[rows]
+                dl_inv[ci, :len(rows)] = inv_d[rows]
+            st = {"dl_ids": jnp.asarray(dl_ids),
+                  "dl_inv": jnp.asarray(dl_inv)}
+            if self.is_pq:
+                base = self.base
+                res = self.delta_x - base.anchors_h[self.delta_assign]
+                codes = pqmod.pack_codes(
+                    pqmod.encode_pq(res, base.codebooks_h), base.nbits)
+                # row-major (C, Lc, MB): the fused scan is the only
+                # consumer, and its gather wants rows contiguous
+                dl_codes = np.zeros((c, lc, codes.shape[1]), np.uint8)
+                for ci, rows in members.items():
+                    dl_codes[ci, :len(rows)] = codes[rows]
+                sup_all, inv_all = self._combined_flat(base, nd, inv_d, d)
+                st.update(dl_codes=jnp.asarray(dl_codes),
+                          sup_all=jnp.asarray(sup_all),
+                          inv_all=jnp.asarray(inv_all))
+            else:
+                dl_sup = np.zeros((c, lc, d), np.float32)
+                for ci, rows in members.items():
+                    dl_sup[ci, :len(rows)] = self.delta_x[rows]
+                st["dl_sup"] = jnp.asarray(dl_sup)
+            self._fused = st
+            return st
+
+    def _combined_flat(self, base, nd: int, inv_d: np.ndarray, d: int):
+        """Host buffers for the combined re-rank tier (base rows then delta
+        rows at their global ids), padded to a pow2 delta capacity.  The
+        O(n_base) prefix is written ONCE per (base, capacity) pair and the
+        buffers are retained across appends — only the freshly appended
+        delta rows are copied in per rebuild, so a feedback batch costs
+        O(delta) host work, not a full 4*N*D copy."""
+        cap = _pow2_pad(nd)
+        buf = getattr(self, "_flat_buf", None)
+        if (buf is None or buf["base"] is not base or buf["cap"] != cap):
+            sup_all = np.zeros((base.n_rows + cap, d), np.float32)
+            sup_all[:base.n_rows] = base.sup_flat_h
+            inv_all = np.zeros(base.n_rows + cap, np.float32)
+            inv_all[:base.n_rows][
+                base.ids_h[base.ids_h >= 0]] = base.inv_h[base.ids_h >= 0]
+            buf = {"base": base, "cap": cap, "sup": sup_all, "inv": inv_all,
+                   "nd": 0}
+            self._flat_buf = buf
+        lo = min(buf["nd"], nd)          # appends only grow the tier
+        buf["sup"][base.n_rows + lo:base.n_rows + nd] = self.delta_x[lo:]
+        buf["inv"][base.n_rows + lo:base.n_rows + nd] = inv_d[lo:]
+        buf["nd"] = nd
+        return buf["sup"], buf["inv"]
 
     # ---- delta-tier scan + merge ----
     def delta_topk(self, queries, k: int):
@@ -691,7 +900,7 @@ def _adc_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFPQIndex,
     packed codes (m byte-indexed reads per row instead of a D-MAC dot), plus
     the per-pair anchor dot and the EXACT stored inverse norms."""
     qn, _ = q.shape
-    c, l, mb = index.codes_h.shape
+    c, mb, l = index.codes_h.shape
     m, kk = index.m, 2 ** index.nbits
     pair_c, q_rows, order = _pair_layout(q_probe)
     sorted_c = pair_c[order]
@@ -706,7 +915,9 @@ def _adc_pairs_host(q: np.ndarray, q_probe: np.ndarray, index: IVFPQIndex,
     ends = np.searchsorted(sorted_c, np.arange(c), side="right")
     for ci in np.unique(sorted_c):
         s0, s1 = starts[ci], ends[ci]
-        codes = pqmod.unpack_codes(index.codes_h[ci], m, index.nbits) + offs
+        # cached row-major mirror -> per-row codes for the LUT gather loop
+        codes = pqmod.unpack_codes(index.codes_rm_h[ci], m,
+                                   index.nbits) + offs
         lseg = lut[q_rows[s0:s1]]                      # (P_c, m*K)
         acc = lseg[:, codes[:, 0]]                     # (P_c, L)
         for j in range(1, m):                          # accumulate in place:
@@ -751,7 +962,7 @@ def _adc_tiles(queries, q_probe, tile_probe, tile_valid, codes_cm, ids_cm,
     matmul."""
     qp, d = queries.shape
     t, s = tile_probe.shape
-    l = codes_cm.shape[1]
+    l = codes_cm.shape[2]
     p = q_probe.shape[1]
     kk = 2 ** nbits
 
@@ -760,9 +971,9 @@ def _adc_tiles(queries, q_probe, tile_probe, tile_valid, codes_cm, ids_cm,
                      preferred_element_type=jnp.float32)
     lut = lut.reshape(t, bq, m * kk)
 
-    codes = pqmod.unpack_codes_jnp(
-        jnp.take(codes_cm, tile_probe, axis=0), m, nbits)   # (T, S, L, m)
-    codes = codes.reshape(t, 1, s * l, m)
+    codes = pqmod.unpack_codes_jnp_cm(
+        jnp.take(codes_cm, tile_probe, axis=0), m, nbits)   # (T, S, m, L)
+    codes = jnp.moveaxis(codes, 2, 3).reshape(t, 1, s * l, m)
     # accumulate per subspace (static loop): peak memory stays (T, BQ, S*L)
     # instead of the m-times-larger all-subspace partials tensor
     sims = jnp.zeros((t, bq, s * l), jnp.float32)
@@ -811,6 +1022,248 @@ def _rerank_exact(queries, sup_flat, shortlist_idx, k: int):
     return scores, idx.astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# fused single-dispatch backend: probe -> scan -> shortlist -> re-rank in
+# ONE jitted call (no host-side tile planning, no second host->device hop)
+# ---------------------------------------------------------------------------
+
+def _rerank_stored_inv(qf, sup_flat, inv_flat, shortlist_idx, k: int):
+    """Exact re-rank against the raw cold rows using the STORED inverse
+    norms (the same float values the ADC stage multiplied by) — one (Q, kk)
+    gather replaces `_rerank_exact`'s (Q, kk, D) square-sum, which on the
+    serving hot path is a ~25% cut of the stage-2 cost.  Same -inf / -1
+    output contract."""
+    safe = jnp.maximum(shortlist_idx, 0)
+    rows = jnp.take(sup_flat, safe, axis=0)
+    sims = jnp.einsum("qd,qkd->qk", qf, rows,
+                      preferred_element_type=jnp.float32)
+    sims = sims * jnp.take(inv_flat, safe, axis=0)
+    sims = jnp.where(shortlist_idx >= 0, sims, -jnp.inf)
+    scores, pos = jax.lax.top_k(sims, k)
+    idx = jnp.take_along_axis(shortlist_idx, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores, idx.astype(jnp.int32)
+
+
+def _adc_probe_scan(qf, probe, lut_flat, codes_rm, ids_cm, inv_cm, anchors,
+                    m: int, nbits: int):
+    """ADC-score every row of the probed lists: gather the ROW-MAJOR packed
+    blocks (``codes_rm`` — the derived gather-friendly mirror of the
+    code-major storage) per query, sum LUT entries with ONE flat `jnp.take`
+    (flattened (query, subspace, code) indices — ~4x faster on CPU XLA than
+    a per-subspace take_along_axis loop, and the m codes of a row stay
+    adjacent so the reduce runs over the minor axis), add the anchor dot,
+    scale by the exact stored inverse norms.  Returns (sims (Q, P*L),
+    ids (Q, P*L)) with -inf / -1 on padding rows."""
+    qn = qf.shape[0]
+    p = probe.shape[1]
+    l = codes_rm.shape[1]
+    kb = 2 ** nbits
+    codes = pqmod.unpack_codes_jnp(
+        jnp.take(codes_rm, probe, axis=0), m, nbits)         # (Q, P, L, m)
+    qoff = (jnp.arange(qn, dtype=jnp.int32) * (m * kb)).reshape(qn, 1, 1, 1)
+    joff = (jnp.arange(m, dtype=jnp.int32) * kb).reshape(1, 1, 1, m)
+    vals = jnp.take(lut_flat, (codes + qoff + joff).reshape(-1), axis=0)
+    sims = vals.reshape(qn, p, l, m).sum(axis=3)             # (Q, P, L)
+    aq = jnp.einsum("qd,qpd->qp", qf, jnp.take(anchors, probe, axis=0),
+                    preferred_element_type=jnp.float32)
+    inv = jnp.take(inv_cm, probe, axis=0)
+    ids = jnp.take(ids_cm, probe, axis=0)
+    sims = (sims + aq[:, :, None]) * inv
+    sims = jnp.where(ids >= 0, sims, -jnp.inf)
+    return sims.reshape(qn, p * l), ids.reshape(qn, p * l)
+
+
+def _adc_lut_flat(qf, codebooks, m: int, nbits: int):
+    """Flattened per-query ADC tables (Q * m * 2^nbits,) for the one-take
+    gather in `_adc_probe_scan`."""
+    qn, d = qf.shape
+    lut = jnp.einsum("qmd,mkd->qmk", qf.reshape(qn, m, d // m), codebooks,
+                     preferred_element_type=jnp.float32)
+    return lut.reshape(qn * m * 2 ** nbits)
+
+
+def _fused_ivf_topk_impl(queries, centroids, sup_cm, ids_cm, inv_cm,
+                         k: int, nprobe: int):
+    """Single-dispatch raw-IVF search: in-jit probe, dense per-query list
+    gather (the same formulation as the sharded path's local stage), one
+    batched einsum, one top-k.  Trades the host traversal's read-each-list-
+    once BLAS for zero host planning — the right trade for the serving tier
+    where the per-batch dispatch chain is the bottleneck, not FLOPs."""
+    qf = queries.astype(jnp.float32)
+    qn = qf.shape[0]
+    probe = ivf_probe(qf, centroids, nprobe)                 # (Q, P)
+    lists = jnp.take(sup_cm, probe, axis=0)                  # (Q, P, L, D)
+    ids = jnp.take(ids_cm, probe, axis=0)
+    inv = jnp.take(inv_cm, probe, axis=0)
+    sims = jnp.einsum("qd,qpld->qpl", qf, lists,
+                      preferred_element_type=jnp.float32) * inv
+    sims = jnp.where(ids >= 0, sims, -jnp.inf).reshape(qn, -1)
+    sc, pos = jax.lax.top_k(sims, k)
+    ix = jnp.take_along_axis(ids.reshape(qn, -1), pos, axis=1)
+    return sc, jnp.where(jnp.isfinite(sc), ix, -1).astype(jnp.int32)
+
+
+def _fused_dyn_ivf_topk_impl(queries, centroids, sup_cm, ids_cm, inv_cm,
+                             dl_sup, dl_ids, dl_inv, k: int, nprobe: int):
+    """`_fused_ivf_topk` plus the PROBED delta tier: the per-centroid delta
+    sub-lists are gathered by the same probe set, exact-scored, and merged
+    into the same single top-k — the streaming index costs one wider
+    selection instead of a separate O(Q * delta) exact scan."""
+    qf = queries.astype(jnp.float32)
+    qn = qf.shape[0]
+    probe = ivf_probe(qf, centroids, nprobe)
+    lists = jnp.take(sup_cm, probe, axis=0)
+    ids_b = jnp.take(ids_cm, probe, axis=0)
+    inv_b = jnp.take(inv_cm, probe, axis=0)
+    sims_b = jnp.einsum("qd,qpld->qpl", qf, lists,
+                        preferred_element_type=jnp.float32) * inv_b
+    dlists = jnp.take(dl_sup, probe, axis=0)                 # (Q, P, Lc, D)
+    ids_d = jnp.take(dl_ids, probe, axis=0)
+    inv_d = jnp.take(dl_inv, probe, axis=0)
+    sims_d = jnp.einsum("qd,qpld->qpl", qf, dlists,
+                        preferred_element_type=jnp.float32) * inv_d
+    sims = jnp.concatenate([sims_b.reshape(qn, -1),
+                            sims_d.reshape(qn, -1)], axis=1)
+    ids = jnp.concatenate([ids_b.reshape(qn, -1),
+                           ids_d.reshape(qn, -1)], axis=1)
+    sims = jnp.where(ids >= 0, sims, -jnp.inf)
+    sc, pos = jax.lax.top_k(sims, k)
+    ix = jnp.take_along_axis(ids, pos, axis=1)
+    return sc, jnp.where(jnp.isfinite(sc), ix, -1).astype(jnp.int32)
+
+
+def _fused_ivfpq_topk_impl(queries, centroids, codes_cm, ids_cm, inv_cm,
+                           anchors, codebooks, sup_flat, inv_flat, k: int,
+                           kk: int, nprobe: int, m: int, nbits: int):
+    """Single-dispatch two-stage IVF-PQ search: in-jit probe, flat-take ADC
+    scan of the probed code-major lists, global top-``kk`` shortlist, and
+    the exact re-rank folded into the SAME dispatch (a jitted `take` of the
+    cold rows + one batched matvec against the stored inverse norms).
+    ``kk=0`` skips stage 2 and returns raw ADC order."""
+    qf = queries.astype(jnp.float32)
+    probe = ivf_probe(qf, centroids, nprobe)
+    lut = _adc_lut_flat(qf, codebooks, m, nbits)
+    sims, ids = _adc_probe_scan(qf, probe, lut, codes_cm, ids_cm, inv_cm,
+                                anchors, m, nbits)
+    if not kk:
+        sc, pos = jax.lax.top_k(sims, k)
+        ix = jnp.take_along_axis(ids, pos, axis=1)
+        return sc, jnp.where(jnp.isfinite(sc), ix, -1).astype(jnp.int32)
+    sc, pos = jax.lax.top_k(sims, kk)
+    ix = jnp.take_along_axis(ids, pos, axis=1)
+    ix = jnp.where(jnp.isfinite(sc), ix, -1)
+    return _rerank_stored_inv(qf, sup_flat, inv_flat, ix, k)
+
+
+def _fused_dyn_ivfpq_topk_impl(queries, centroids, codes_cm, ids_cm, inv_cm,
+                               anchors, codebooks, dl_codes, dl_ids, dl_inv,
+                               sup_all, inv_all, k: int, kk: int, nprobe: int,
+                               m: int, nbits: int):
+    """`_fused_ivfpq_topk` plus the PROBED delta tier: appended rows live in
+    per-centroid sub-lists ENCODED with the existing codebooks, so they join
+    the same ADC scan (and the same shortlist selection), and the combined
+    flat tier ``sup_all`` re-ranks base and delta candidates alike — the
+    whole streaming search stays one dispatch at near the frozen-index
+    cost."""
+    qf = queries.astype(jnp.float32)
+    probe = ivf_probe(qf, centroids, nprobe)
+    lut = _adc_lut_flat(qf, codebooks, m, nbits)
+    sims_b, ids_b = _adc_probe_scan(qf, probe, lut, codes_cm, ids_cm, inv_cm,
+                                    anchors, m, nbits)
+    sims_d, ids_d = _adc_probe_scan(qf, probe, lut, dl_codes, dl_ids, dl_inv,
+                                    anchors, m, nbits)
+    sims = jnp.concatenate([sims_b, sims_d], axis=1)
+    ids = jnp.concatenate([ids_b, ids_d], axis=1)
+    if not kk:
+        sc, pos = jax.lax.top_k(sims, k)
+        ix = jnp.take_along_axis(ids, pos, axis=1)
+        return sc, jnp.where(jnp.isfinite(sc), ix, -1).astype(jnp.int32)
+    sc, pos = jax.lax.top_k(sims, kk)
+    ix = jnp.take_along_axis(ids, pos, axis=1)
+    ix = jnp.where(jnp.isfinite(sc), ix, -1)
+    return _rerank_stored_inv(qf, sup_all, inv_all, ix, k)
+
+
+#: standalone single-dispatch entry points (the ops-level backend="fused"
+#: path).  The serving layer instead inlines the *_impl bodies into its own
+#: jit: XLA CPU lowers `lax.top_k` to its fast TopK custom call only in the
+#: top-level computation, so nesting these as inner pjit calls would drop
+#: the shortlist selection to the generic sort (~5x slower at kk=800).
+_fused_ivf_topk = functools.partial(jax.jit, static_argnames=(
+    "k", "nprobe"))(_fused_ivf_topk_impl)
+_fused_dyn_ivf_topk = functools.partial(jax.jit, static_argnames=(
+    "k", "nprobe"))(_fused_dyn_ivf_topk_impl)
+_fused_ivfpq_topk = functools.partial(jax.jit, static_argnames=(
+    "k", "kk", "nprobe", "m", "nbits"))(_fused_ivfpq_topk_impl)
+_fused_dyn_ivfpq_topk = functools.partial(jax.jit, static_argnames=(
+    "k", "kk", "nprobe", "m", "nbits"))(_fused_dyn_ivfpq_topk_impl)
+
+
+def _fused_ivf_dispatch(queries, index, k: int, nprobe: int):
+    """backend='fused' entry for raw IVF — handles the streaming wrapper by
+    switching to the probed-delta variant when the tier is non-empty.
+    Clamps ``k`` to the candidate pool the fused scan actually covers."""
+    if isinstance(index, DynamicIVFIndex):
+        with index._lock:     # consistent (base, delta) under background
+            base = index.base  # compaction swaps
+            n = index.n_rows
+            st = index.fused_state() if index.delta_rows else None
+        if st is None:
+            k = min(k, n, nprobe * base.list_size)
+            return _fused_ivf_topk(queries, base.centroids, base.sup_cm,
+                                   base.ids_cm, base.inv_cm, k=k,
+                                   nprobe=nprobe)
+        lc = st["dl_sup"].shape[1]
+        k = min(k, n, nprobe * (base.list_size + lc))
+        return _fused_dyn_ivf_topk(queries, base.centroids, base.sup_cm,
+                                   base.ids_cm, base.inv_cm, st["dl_sup"],
+                                   st["dl_ids"], st["dl_inv"],
+                                   k=k, nprobe=nprobe)
+    k = min(k, index.n_rows, nprobe * index.list_size)
+    return _fused_ivf_topk(queries, index.centroids, index.sup_cm,
+                           index.ids_cm, index.inv_cm, k=k, nprobe=nprobe)
+
+
+def _fused_ivfpq_dispatch(queries, index, k: int, rerank: int, nprobe: int):
+    """backend='fused' entry for IVF-PQ — probed-delta variant when the
+    streaming tier is non-empty.  Computes the same ``k`` / shortlist
+    clamps as the staged backends."""
+    if isinstance(index, DynamicIVFIndex):
+        with index._lock:     # consistent (base, delta) under background
+            base = index.base  # compaction swaps
+            n = index.n_rows
+            st = index.fused_state() if index.delta_rows else None
+        if st is None:
+            cand = nprobe * base.list_size
+            k = min(k, n, cand)
+            kk = min(max(rerank, 1) * k, n, cand) if rerank else 0
+            return _fused_ivfpq_topk(queries, base.centroids, base.codes_rm,
+                                     base.ids_cm, base.inv_cm, base.anchors,
+                                     base.codebooks, base.sup_flat,
+                                     base.inv_flat, k=k, kk=kk, nprobe=nprobe,
+                                     m=base.m, nbits=base.nbits)
+        lc = st["dl_codes"].shape[1]
+        cand = nprobe * (base.list_size + lc)
+        k = min(k, n, cand)
+        kk = min(max(rerank, 1) * k, n, cand) if rerank else 0
+        return _fused_dyn_ivfpq_topk(queries, base.centroids, base.codes_rm,
+                                     base.ids_cm, base.inv_cm, base.anchors,
+                                     base.codebooks, st["dl_codes"],
+                                     st["dl_ids"], st["dl_inv"],
+                                     st["sup_all"], st["inv_all"],
+                                     k=k, kk=kk, nprobe=nprobe,
+                                     m=base.m, nbits=base.nbits)
+    cand = nprobe * index.list_size
+    k = min(k, index.n_rows, cand)
+    kk = min(max(rerank, 1) * k, index.n_rows, cand) if rerank else 0
+    return _fused_ivfpq_topk(queries, index.centroids, index.codes_rm,
+                             index.ids_cm, index.inv_cm, index.anchors,
+                             index.codebooks, index.sup_flat, index.inv_flat,
+                             k=k, kk=kk, nprobe=nprobe, m=index.m,
+                             nbits=index.nbits)
+
+
 def ivf_topk(queries, index: IVFIndex, k: int,
              nprobe: int = DEFAULT_NPROBE, *, use_pallas: bool = False,
              backend: str | None = None, interpret: bool = True,
@@ -820,20 +1273,25 @@ def ivf_topk(queries, index: IVFIndex, k: int,
     of valid candidates hold -inf / -1.
 
     backend: 'host' (CPU BLAS inverted traversal — default), 'tiles'
-    (jittable XLA twin of the kernel's tiling), or 'pallas' (the kernel;
-    also selected by use_pallas=True).  All three implement identical
+    (jittable XLA twin of the kernel's tiling), 'pallas' (the kernel;
+    also selected by use_pallas=True), or 'fused' (probe + scan + top-k in
+    ONE jitted dispatch — the serving hot path).  All implement identical
     per-query top-nprobe semantics.
 
     A `DynamicIVFIndex` dispatches to its frozen base on the chosen backend
-    and merges the exact-scanned delta tier into the result."""
+    and merges the exact-scanned delta tier into the result — except on the
+    fused backend, which PROBES the per-centroid delta sub-lists inside the
+    same dispatch."""
+    nprobe = max(1, min(nprobe, index.n_clusters))
+    backend = backend or ("pallas" if use_pallas else "host")
+    if backend == "fused":
+        return _fused_ivf_dispatch(jnp.asarray(queries), index, k, nprobe)
     if isinstance(index, DynamicIVFIndex):
         base_sc, base_ix = ivf_topk(
             queries, index.base, k, nprobe, use_pallas=use_pallas,
             backend=backend, interpret=interpret, block_q=block_q)
         return index.merge_delta(queries, base_sc, base_ix, k)
-    nprobe = max(1, min(nprobe, index.n_clusters))
     k = min(k, index.n_rows, nprobe * index.list_size)
-    backend = backend or ("pallas" if use_pallas else "host")
     queries = jnp.asarray(queries)
     q_probe = np.asarray(ivf_probe(queries, index.centroids, nprobe))
 
@@ -878,47 +1336,75 @@ def ivfpq_topk(queries, index: IVFPQIndex, k: int,
     re-sorted among themselves, so the candidate SET still comes from ADC
     but the returned ordering is exact.
 
+    ``backend='fused'`` runs probe, ADC scan, shortlist selection AND the
+    exact re-rank in one jitted dispatch (`_fused_ivfpq_topk`) — the serving
+    hot path.  The staged backends fold stage 2 into the same jitted call as
+    their scoring pass (`_staged_tail`), so every backend re-ranks without a
+    second host->device hop; 'host' remains the CPU reference/debug
+    traversal.
+
     A `DynamicIVFIndex` dispatches to its frozen base and merges the
-    exact-scanned delta tier.  With ``rerank >= 1`` both sides carry exact
-    cosine scores, so the merge order is exact; at ``rerank=0`` the base
-    side is raw ADC and the merge compares approximate base scores with
-    exact delta scores (delta rows keep their exactness either way)."""
+    exact-scanned delta tier — except on the fused backend, which PROBES
+    the per-centroid delta sub-lists inside the same dispatch.  With
+    ``rerank >= 1`` both sides carry exact cosine scores, so the merge order
+    is exact; at ``rerank=0`` the base side is raw ADC and the merge
+    compares approximate base scores with exact delta scores (delta rows
+    keep their exactness either way)."""
+    nprobe = max(1, min(nprobe, index.n_clusters))
+    backend = backend or ("pallas" if use_pallas else "host")
+    if backend == "fused":
+        return _fused_ivfpq_dispatch(jnp.asarray(queries), index, k, rerank,
+                                     nprobe)
     if isinstance(index, DynamicIVFIndex):
         base_sc, base_ix = ivfpq_topk(
             queries, index.base, k, nprobe, rerank, use_pallas=use_pallas,
             backend=backend, interpret=interpret, block_q=block_q)
         return index.merge_delta(queries, base_sc, base_ix, k)
-    nprobe = max(1, min(nprobe, index.n_clusters))
     k = min(k, index.n_rows, nprobe * index.list_size)
     kk = min(max(rerank, 1) * k, index.n_rows, nprobe * index.list_size)
-    backend = backend or ("pallas" if use_pallas else "host")
     queries = jnp.asarray(queries)
     q_probe = np.asarray(ivf_probe(queries, index.centroids, nprobe))
 
     if backend == "host":
         scores, idx = _adc_pairs_host(np.asarray(queries, np.float32),
                                       q_probe, index, kk)
-    elif backend in ("tiles", "pallas"):
-        q_sorted, qp_sorted, tile_probe, tile_valid, inv_order, bq = \
-            _sorted_tile_plan(queries, q_probe, block_q)
-        if backend == "pallas":
-            scores, idx = ivfpq_adc_pallas(
-                q_sorted, index.codes_cm, index.ids_cm, index.inv_cm,
-                index.anchors, index.cb_mat, jnp.asarray(qp_sorted),
-                jnp.asarray(tile_probe), jnp.asarray(tile_valid), kk,
-                m=index.m, nbits=index.nbits, interpret=interpret)
-            scores = jnp.where(idx >= 0, scores, -jnp.inf)
-        else:
-            scores, idx = _adc_tiles(
-                q_sorted, jnp.asarray(qp_sorted), jnp.asarray(tile_probe),
-                jnp.asarray(tile_valid), index.codes_cm, index.ids_cm,
-                index.inv_cm, index.anchors, index.codebooks, kk, bq,
-                index.m, index.nbits)
-        inv_order = jnp.asarray(inv_order)
-        scores, idx = scores[inv_order], idx[inv_order]
-    else:
+        if not rerank:
+            return scores[:, :k], idx[:, :k]
+        return _rerank_exact(queries, index.sup_flat, idx, k)
+    if backend not in ("tiles", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
+    q_sorted, qp_sorted, tile_probe, tile_valid, inv_order, bq = \
+        _sorted_tile_plan(queries, q_probe, block_q)
+    return _staged_tail(
+        queries, q_sorted, jnp.asarray(qp_sorted), jnp.asarray(tile_probe),
+        jnp.asarray(tile_valid), jnp.asarray(inv_order), index.codes_cm,
+        index.ids_cm, index.inv_cm, index.anchors,
+        index.cb_mat if backend == "pallas" else index.codebooks,
+        index.sup_flat, k=k, kk=kk, bq=bq, m=index.m, nbits=index.nbits,
+        rerank=bool(rerank), backend=backend, interpret=interpret)
 
+
+@functools.partial(jax.jit, static_argnames=("k", "kk", "bq", "m", "nbits",
+                                             "rerank", "backend",
+                                             "interpret"))
+def _staged_tail(queries, q_sorted, qp_sorted, tile_probe, tile_valid,
+                 inv_order, codes_cm, ids_cm, inv_cm, anchors, cb,
+                 sup_flat, *, k: int, kk: int, bq: int, m: int, nbits: int,
+                 rerank: bool, backend: str, interpret: bool):
+    """Device tail of the tiles/pallas backends: ADC scoring, un-sort, and
+    the exact re-rank in ONE jitted dispatch — after the host plans the
+    tile slot lists there is no further host->device hop.  ``cb`` is the
+    block-diagonal ``cb_mat`` for pallas, the raw codebooks for tiles."""
+    if backend == "pallas":
+        scores, idx = ivfpq_adc_pallas(
+            q_sorted, codes_cm, ids_cm, inv_cm, anchors, cb, qp_sorted,
+            tile_probe, tile_valid, kk, m=m, nbits=nbits, interpret=interpret)
+        scores = jnp.where(idx >= 0, scores, -jnp.inf)
+    else:
+        scores, idx = _adc_tiles(
+            q_sorted, qp_sorted, tile_probe, tile_valid, codes_cm, ids_cm,
+            inv_cm, anchors, cb, kk, bq, m, nbits)
+    scores, idx = scores[inv_order], idx[inv_order]
     if not rerank:
         return scores[:, :k], idx[:, :k]
-    return _rerank_exact(queries, index.sup_flat, idx, k)
+    return _rerank_exact(queries, sup_flat, idx, k)

@@ -144,6 +144,20 @@ def unpack_codes_jnp(packed, m: int, nbits: int):
     return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], m)
 
 
+def unpack_codes_jnp_cm(packed, m: int, nbits: int):
+    """Code-major twin of ``unpack_codes_jnp``: packed ``(..., MB, L)``
+    blocks (the lane-efficient layout the hot lists are stored in) ->
+    ``(..., m, L)`` int32 codes.  nbits=4 interleaves the nibble pairs along
+    the SUBSPACE axis, matching ``pack_codes``'s lo/hi convention."""
+    p = packed.astype(jnp.int32)
+    if nbits == 8:
+        return p
+    lo = p & 0xF                                   # subspaces 0, 2, 4, ...
+    hi = (p >> 4) & 0xF                            # subspaces 1, 3, 5, ...
+    inter = jnp.stack([lo, hi], axis=-2)           # (..., MB, 2, L)
+    return inter.reshape(*p.shape[:-2], m, p.shape[-1])
+
+
 def adc_lut(queries: np.ndarray, codebooks: np.ndarray) -> np.ndarray:
     """Per-query ADC tables: ``(Q, D)`` x ``(m, K, dsub)`` ->
     ``(Q, m, K)`` of subvector dot products."""

@@ -4,9 +4,15 @@ IVF-PQ lists.
 Grid (Q/BQ, S) — the same query-tile x probe-slot schedule as the raw IVF
 kernel (`kernel.py`), with the same scalar-prefetched slot lists so the
 BlockSpec index maps DMA exactly the probed clusters' blocks.  What changes
-is WHAT gets DMA'd per slot: an (L, MB) packed uint8 code block (MB =
+is WHAT gets DMA'd per slot: a CODE-MAJOR (MB, L) packed uint8 block (MB =
 m*nbits/8 bytes/row) instead of an (L, D) float32 row block — the ~16-32x
-cut in per-probe HBM traffic that is the whole point of the PQ tier.
+cut in per-probe HBM traffic that is the whole point of the PQ tier.  The
+code-major layout puts the long list axis L in the MINOR (lane) dimension:
+each of the MB sublane rows is a contiguous, lane-aligned run of L bytes,
+so the per-slot DMA moves MB dense lane vectors instead of L short
+MB-byte rows — and the grid's slot axis keeps the standard Pallas
+double-buffered pipeline (slot s+1's block streams in while slot s is
+scored).
 
 Per query tile the kernel builds the ADC lookup table ONCE into VMEM
 scratch at slot 0:
@@ -62,20 +68,23 @@ def _adc_kernel(probe_ref, valid_ref, q_ref, qp_ref, cb_ref, codes_ref,
     def _merge():
         cid = probe_ref[i, p]
         q = q_ref[...].astype(jnp.float32)                   # (BQ, D)
-        codes = codes_ref[0].astype(jnp.int32)               # (L, MB)
+        codes = codes_ref[0].astype(jnp.int32)               # (MB, L) code-major
         ids = ids_ref[...]                                   # (1, L)
-        l = codes.shape[0]
+        l = codes.shape[1]
 
         # m-hot indicator of the packed codes, accumulated subspace by
         # subspace (static python loop — m is a compile-time constant):
-        # column j*K + c is 1 exactly when the row's j-th code equals c
+        # column j*K + c is 1 exactly when the row's j-th code equals c.
+        # The code-major block hands each subspace's codes as one LANE
+        # vector (codes[j] is contiguous along L) instead of a strided
+        # column read.
         col = jax.lax.broadcasted_iota(jnp.int32, (l, m * kk), 1)
         onehot = jnp.zeros((l, m * kk), jnp.float32)
         for j in range(m):
             if nbits == 8:
-                cj = codes[:, j]
+                cj = codes[j, :]
             else:
-                byte = codes[:, j // 2]
+                byte = codes[j // 2, :]
                 cj = (byte & 0xF) if j % 2 == 0 else ((byte >> 4) & 0xF)
             target = cj[:, None] + j * kk                    # (L, 1)
             onehot = onehot + jnp.where(col == target, 1.0, 0.0)
@@ -106,13 +115,14 @@ def ivfpq_adc_pallas(queries, codes_cm, ids_cm, inv_cm, anchors, cb_mat,
                      q_probe, tile_probe, tile_valid, k: int, *, m: int,
                      nbits: int, interpret: bool = True):
     """queries (Q, D) L2-normalized, Q a multiple of the tile size implied
-    by tile_probe; codes_cm (C, L, MB) packed uint8; ids_cm/inv_cm (C, L);
-    anchors (C, D) raw-space list means; cb_mat (m*2^nbits, D) block-diag
-    codebook expansion; q_probe/tile_probe/tile_valid as in
-    `ivf_topk_pallas`.  Returns the ADC shortlist (scores (Q, k),
-    indices (Q, k)) — original row ids, -1 / NEG in empty slots."""
+    by tile_probe; codes_cm (C, MB, L) CODE-MAJOR packed uint8; ids_cm /
+    inv_cm (C, L); anchors (C, D) raw-space list means; cb_mat
+    (m*2^nbits, D) block-diag codebook expansion; q_probe/tile_probe/
+    tile_valid as in `ivf_topk_pallas`.  Returns the ADC shortlist
+    (scores (Q, k), indices (Q, k)) — original row ids, -1 / NEG in empty
+    slots."""
     Q, D = queries.shape
-    C, L, MB = codes_cm.shape
+    C, MB, L = codes_cm.shape
     T, S = tile_probe.shape
     P = q_probe.shape[1]
     MK = m * 2 ** nbits
@@ -128,7 +138,7 @@ def ivfpq_adc_pallas(queries, codes_cm, ids_cm, inv_cm, anchors, cb_mat,
             pl.BlockSpec((bq, D), lambda i, p, probe, valid: (i, 0)),
             pl.BlockSpec((bq, P), lambda i, p, probe, valid: (i, 0)),
             pl.BlockSpec((MK, D), lambda i, p, probe, valid: (0, 0)),
-            pl.BlockSpec((1, L, MB),
+            pl.BlockSpec((1, MB, L),
                          lambda i, p, probe, valid: (probe[i, p], 0, 0)),
             pl.BlockSpec((1, L),
                          lambda i, p, probe, valid: (probe[i, p], 0)),

@@ -49,16 +49,16 @@ def ivfpq_adc_reference(queries, centroids, anchors, codebooks, codes_cm,
     tiles, Pallas kernel) can be checked against an implementation that
     shares no code with them.  Output contract matches `ivf_topk_reference`:
     -inf / -1 beyond the valid candidates."""
-    from .pq import unpack_codes_jnp
+    from .pq import unpack_codes_jnp_cm
 
     Q, _ = queries.shape
-    C, L, _ = codes_cm.shape
+    C, _, L = codes_cm.shape
     nprobe = min(nprobe, C)
     q = queries.astype(jnp.float32)
     probe = ivf_probe(q, centroids, nprobe)                 # (Q, P)
 
-    codes = unpack_codes_jnp(codes_cm, m, nbits)            # (C, L, m)
-    parts = jnp.stack([codebooks[j, codes[:, :, j]] for j in range(m)],
+    codes = unpack_codes_jnp_cm(codes_cm, m, nbits)         # (C, m, L)
+    parts = jnp.stack([codebooks[j, codes[:, j, :]] for j in range(m)],
                       axis=2)                               # (C, L, m, dsub)
     recon = anchors[:, None, :] + parts.reshape(C, L, -1)   # (C, L, D)
 

@@ -59,11 +59,13 @@ class RoutedResult:
     confidence: Optional[float] = None
 
 
-@jax.jit
 def _route_batch(s_hat, c_hat, lam):
-    """Single batched utility path: per-request lambda, argmax over models."""
-    util = s_hat - lam[:, None] * c_hat
-    return jnp.argmax(util, axis=1), util
+    """Single batched utility path: per-request lambda, argmax over models.
+    Delegates to the SAME jitted kernel the routers' fused serving path
+    inlines (`_select_jit`), so the legacy multi-dispatch chain and
+    `route_fused` make bitwise-identical decisions."""
+    from repro.core.routers.knn import _select_jit
+    return _select_jit(s_hat, c_hat, lam)
 
 
 def knn_service(ds: RoutingDataset, engines: Dict[str, "ServingEngine"],
@@ -158,14 +160,17 @@ class RouterService:
                              f"shape {arr.shape}")
         return arr
 
-    def _choose(self, s_hat: np.ndarray, c_hat: np.ndarray, lam,
-                n: int) -> tuple:
-        """Shared decision core: validate arity, resolve per-request lambdas,
-        run the jitted batched utility argmax."""
+    def _check_arity(self, s_hat: np.ndarray) -> None:
         if s_hat.shape[1] != len(self.model_names):
             raise ValueError(
                 f"router emitted {s_hat.shape[1]} model columns, expected "
                 f"{len(self.model_names)} ({self.model_names})")
+
+    def _choose(self, s_hat: np.ndarray, c_hat: np.ndarray, lam,
+                n: int) -> tuple:
+        """Shared decision core: validate arity, resolve per-request lambdas,
+        run the jitted batched utility argmax."""
+        self._check_arity(s_hat)
         lam_r = self._resolve_lam(lam, n)
         choice, _ = _route_batch(jnp.asarray(s_hat), jnp.asarray(c_hat),
                                  jnp.asarray(lam_r))
@@ -176,9 +181,44 @@ class RouterService:
         choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
         return choice, s_hat, c_hat, lam_r
 
+    # ---- fused single-dispatch hot path ----
+    def route_fused(self, emb: np.ndarray, lam=None, qmesh=None) -> tuple:
+        """One routed batch, one device dispatch: retrieval -> per-model
+        utility -> confidence -> per-request-lambda selection fused inside a
+        single jit on routers that support it (`KNNRouter.serve_fused`),
+        with one device sync for the whole batch.  Falls back to the legacy
+        chain for routers without a fused path — same numbers either way,
+        because both paths share the same jitted kernels.
+
+        Returns (choice, s_hat, c_hat, confidence-or-None, lam_r) as numpy.
+        ``qmesh`` shards the batch axis across a device mesh (replicated
+        index; bitwise-identical results)."""
+        emb = np.atleast_2d(np.asarray(emb, np.float32))
+        lam_r = self._resolve_lam(lam, len(emb))
+        sf = getattr(self.router, "serve_fused", None)
+        if callable(sf):
+            choice, s_hat, c_hat, _, agree = sf(emb, lam_r, qmesh=qmesh)
+            self._check_arity(s_hat)
+            return np.asarray(choice), s_hat, c_hat, agree, lam_r
+        s_hat, c_hat, conf = self._predict_for_serving(emb)
+        choice, lam_r = self._choose(s_hat, c_hat, lam_r, len(emb))
+        return choice, s_hat, c_hat, conf, lam_r
+
+    def route_legacy(self, emb: np.ndarray, lam=None) -> tuple:
+        """The pre-fusion multi-dispatch chain — retrieval dispatch, utility
+        dispatch, selection dispatch, with a host sync between each — kept
+        as the parity oracle and the benchmark baseline for
+        `benchmarks/serving_latency.py`.  Same return shape as
+        `route_fused`."""
+        emb = np.atleast_2d(np.asarray(emb, np.float32))
+        s_hat, c_hat, conf = self._predict_for_serving(emb)
+        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
+        return choice, s_hat, c_hat, conf, lam_r
+
     def route_embeddings(self, emb: np.ndarray, lam=None) -> np.ndarray:
-        """Per-request lambda routing over raw embeddings -> model indices."""
-        return self._decide(emb, lam)[0]
+        """Per-request lambda routing over raw embeddings -> model indices
+        (served through the fused single-dispatch path)."""
+        return self.route_fused(emb, lam)[0]
 
     def _predict_for_serving(self, emb: np.ndarray):
         """(s_hat, c_hat, agreement-or-None) with ONE retrieval pass.
@@ -199,8 +239,7 @@ class RouterService:
     def submit_texts(self, texts: Sequence[str], prompts_tokens=None,
                      max_new_tokens: int = 8, lam=None) -> List[RoutedResult]:
         emb = encoder.embed_texts(list(texts))
-        s_hat, c_hat, conf = self._predict_for_serving(emb)
-        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
+        choice, s_hat, c_hat, conf, lam_r = self.route_fused(emb, lam)
 
         results = []
         for i, text in enumerate(texts):
@@ -228,7 +267,8 @@ class RouterService:
         return results
 
     # ---- feedback ingestion ----
-    def observe(self, queries, scores, costs=None, recluster="auto") -> int:
+    def observe(self, queries, scores, costs=None,
+                recluster="background") -> int:
         """Routed-then-judged traffic becomes new support rows in place: the
         non-parametric router's whole "training step" is appending the
         observation, so the very next identical query retrieves it.
@@ -239,9 +279,13 @@ class RouterService:
         ``costs`` — optional, same shape, defaults to zero.
 
         The request path never blocks on an index rebuild: appends land in
-        the exact-scanned delta tier, and compaction only runs here, once
-        the tier exceeds the router's ``delta_cap`` (``recluster="auto"``;
-        pass ``False`` to defer entirely, ``True`` to force one now).
+        the delta tier (probed per-centroid sub-lists on the fused backend,
+        exact-scanned on the staged ones), and compaction only runs once the
+        tier exceeds the router's ``delta_cap`` — by default
+        (``recluster="background"``) on a daemon thread with an atomic
+        index swap, so even THIS call returns without waiting on k-means.
+        Pass ``"auto"`` to compact synchronously in-line, ``False`` to
+        defer entirely, ``True`` to force a synchronous compaction now.
         Returns the router's support size after ingestion."""
         pf = getattr(self.router, "partial_fit", None)
         if not callable(pf):

@@ -1,12 +1,25 @@
-"""Request-level scheduler: batches incoming requests into admission waves
-per engine with a cost budget (utility-aware admission), FIFO within class.
-Deliberately simple and deterministic — the policies the paper cares about
-live in the router; the scheduler's job is backpressure."""
+"""Request-level scheduling: micro-batch coalescing in front of the router
+and admission waves behind it.
+
+`MicroBatcher` sits between request arrival and routing: concurrent small
+requests accumulate (each with its own per-request lambda) and one
+``flush()`` routes them all through `RouterService.route_fused` — ONE
+device dispatch for the whole wave, which is what amortizes the fused
+path's fixed dispatch cost when traffic arrives as single requests instead
+of ready-made batches.
+
+`WaveScheduler` batches admitted requests into per-engine decode waves with
+FIFO order and slot backpressure.  Deliberately simple and deterministic —
+the policies the paper cares about live in the router; the scheduler's job
+is backpressure.  Constructed with a ``batcher``, every ``tick()`` first
+flushes pending routes and enqueues the results, so the serving loop is
+arrival -> coalesced route -> admission -> decode with no per-request
+dispatches anywhere."""
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List
+from typing import Deque, Dict, List, Optional, Sequence
 
 from .engine import Request, ServingEngine
 
@@ -18,9 +31,59 @@ class SchedulerStats:
     waves: int = 0
 
 
+class MicroBatcher:
+    """Coalesce concurrent route requests into one fused dispatch.
+
+    ``submit(text, lam)`` queues a request and returns its position;
+    ``flush()`` routes up to ``max_batch`` queued requests with a single
+    `RouterService.submit_texts` call (one retrieval + decision dispatch
+    for the whole micro-batch, per-request lambdas preserved) and returns
+    the `RoutedResult`s in submission order; anything beyond ``max_batch``
+    stays queued for the next wave."""
+
+    def __init__(self, service, max_batch: int = 64,
+                 max_new_tokens: int = 8):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.service = service
+        self.max_batch = int(max_batch)
+        self.max_new_tokens = int(max_new_tokens)
+        self._texts: List[str] = []
+        self._lams: List[Optional[float]] = []
+        self.flushes = 0          # dispatches actually issued
+        self.routed = 0           # requests routed through them
+
+    def pending(self) -> int:
+        return len(self._texts)
+
+    def submit(self, text: str, lam: Optional[float] = None) -> int:
+        self._texts.append(text)
+        self._lams.append(lam)
+        return len(self._texts) - 1
+
+    def flush(self) -> List:
+        """Route the pending wave (up to ``max_batch``) in ONE dispatch."""
+        if not self._texts:
+            return []
+        import numpy as np
+        texts, lams = self._texts[:self.max_batch], self._lams[:self.max_batch]
+        self._texts = self._texts[self.max_batch:]
+        self._lams = self._lams[self.max_batch:]
+        default = self.service.default_lam
+        lam_vec = np.asarray([default if l is None else float(l)
+                              for l in lams], np.float32)
+        results = self.service.submit_texts(
+            texts, max_new_tokens=self.max_new_tokens, lam=lam_vec)
+        self.flushes += 1
+        self.routed += len(results)
+        return results
+
+
 class WaveScheduler:
-    def __init__(self, engines: Dict[str, ServingEngine]):
+    def __init__(self, engines: Dict[str, ServingEngine],
+                 batcher: Optional[MicroBatcher] = None):
         self.engines = engines
+        self.batcher = batcher
         self.queues: Dict[str, Deque[Request]] = {
             m: collections.deque() for m in engines}
         self.stats = SchedulerStats()
@@ -28,12 +91,28 @@ class WaveScheduler:
     def enqueue(self, model: str, req: Request):
         self.queues[model].append(req)
 
+    def submit_text(self, text: str, lam: Optional[float] = None):
+        """Queue a text through the micro-batcher (requires ``batcher``);
+        it is routed — coalesced with its wave — on the next ``tick()``."""
+        if self.batcher is None:
+            raise RuntimeError("WaveScheduler was built without a "
+                               "MicroBatcher; pass batcher= to coalesce "
+                               "text requests")
+        self.batcher.submit(text, lam)
+
     def pending(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        n = sum(len(q) for q in self.queues.values())
+        if self.batcher is not None:
+            n += self.batcher.pending()
+        return n
 
     def tick(self):
-        """One scheduling wave: admit up to free slots per engine, then one
-        decode step each."""
+        """One scheduling wave: flush the micro-batcher (one fused routing
+        dispatch for every request that arrived since the last wave), then
+        admit up to free slots per engine and run one decode step each."""
+        if self.batcher is not None:
+            for res in self.batcher.flush():
+                self.enqueue(res.model, res.request)
         for m, eng in self.engines.items():
             q = self.queues[m]
             while q and eng.has_free_slot():

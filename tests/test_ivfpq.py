@@ -274,8 +274,9 @@ def test_artifact_round_trip_bitwise_adc(ds, tmp_path):
 
 
 def test_service_ivfpq_single_pass(ds):
-    """`RouterService.submit_texts` over an ivfpq router: one retrieval per
-    batch feeds routing AND confidence."""
+    """`RouterService.submit_texts` over an ivfpq router: ONE fused
+    dispatch per batch feeds routing AND confidence — no separate
+    `_neighbors` retrieval happens at all."""
     from repro.configs import get_config, reduced
     from repro.core.dataset import RoutingDataset
     from repro.serving import encoder
@@ -296,12 +297,16 @@ def test_service_ivfpq_single_pass(ds):
     svc = knn_service(sds, engines, k=5, index="ivfpq", lam=1.0)
     assert svc.retrieval_backend == "ivfpq"
 
-    calls = {"n": 0}
-    orig = svc.router._neighbors
-    svc.router._neighbors = lambda X: (calls.__setitem__("n", calls["n"] + 1)
-                                       or orig(X))
+    calls = {"fused": 0, "neighbors": 0}
+    orig_sf = svc.router.serve_fused
+    svc.router.serve_fused = lambda *a, **kw: (
+        calls.__setitem__("fused", calls["fused"] + 1) or orig_sf(*a, **kw))
+    orig_nb = svc.router._neighbors
+    svc.router._neighbors = lambda X: (
+        calls.__setitem__("neighbors", calls["neighbors"] + 1) or orig_nb(X))
     results = svc.serve_texts(["topic 1 question", "topic 2 question"],
                               max_new_tokens=3)
-    assert calls["n"] == 1                   # ONE retrieval for the batch
+    assert calls["fused"] == 1               # ONE dispatch for the batch
+    assert calls["neighbors"] == 0           # and no staged retrieval
     assert all(r.request.done for r in results)
     assert all(r.confidence is not None for r in results)

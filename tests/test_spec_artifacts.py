@@ -169,7 +169,8 @@ def test_artifact_preserves_default_lam_and_ivf_layout(ds, tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# format_version 3: the streaming tier round-trips; v1/v2 stay readable
+# format_version 4: streaming tier + code-major layout round-trip; v1/v2/v3
+# artifacts stay readable
 # ---------------------------------------------------------------------------
 
 FIXTURES = Path(__file__).resolve().parent / "fixtures"
@@ -178,11 +179,12 @@ FIXTURES = Path(__file__).resolve().parent / "fixtures"
 def test_dynamic_artifact_round_trip_bitwise(ds, tmp_path):
     """A mid-stream router (pending delta rows, counters ticking) reloads
     bitwise: same predictions, same delta tier, same re-cluster bookkeeping,
-    and the manifest advertises format_version 3."""
+    and the manifest advertises the current format_version (4: code-major
+    packed-code layout)."""
     import json
     from repro.core.routers.artifacts import FORMAT_VERSION
     from repro.kernels.knn_ivf.ops import DynamicIVFIndex
-    assert FORMAT_VERSION == 3
+    assert FORMAT_VERSION == 4
     r = make_router("knn10-ivfpq@online=1,delta_cap=7,m=2").fit(ds)
     rng = np.random.default_rng(4)
     X = ds.part("test")[0]
@@ -195,7 +197,7 @@ def test_dynamic_artifact_round_trip_bitwise(ds, tmp_path):
     s1, c1 = r.predict_utility(X)
     path = save_router(r, tmp_path / "dyn")
     manifest = json.loads((path / "manifest.json").read_text())
-    assert manifest["format_version"] == 3
+    assert manifest["format_version"] == FORMAT_VERSION
     r2 = load_router(path)
     assert isinstance(r2._ivf, DynamicIVFIndex)
     assert r2._ivf.delta_rows == 3 and r2._ivf.appends == 11
