@@ -1,30 +1,46 @@
-"""Latency-under-load sweep of the serving hot path: fused single-dispatch
-routing vs the legacy host-gather multi-dispatch chain, across batch sizes,
-retrieval backends, and streaming delta fractions.
+"""Latency-under-load sweep of the serving hot path — and the fitter of the
+`DispatchPolicy` the serving path consults at runtime.
 
-What `BENCH_retrieval.json` is to recall, this is to serving latency: the
-headline numbers are the IVF-PQ **route** p50 (embedding in hand ->
-retrieval -> per-model utility -> per-request-lambda selection, one device
-sync) for
+What `BENCH_retrieval.json` is to recall, this is to serving latency: every
+(index kind x batch size x serving backend) cell is measured through the
+SAME entry point production traffic uses (`RouterService.route_fused`, one
+host sync per batch), with the backend forced per cell:
 
-  * ``fused``       — `RouterService.route_fused`: ONE jitted dispatch
-                      (sharded over the host's devices when more than one
-                      is visible — bitwise-identical, batch-axis
-                      parallelism only);
-  * ``host_gather`` — `RouterService.route_legacy` over the CPU inverted
-                      traversal: the pre-fusion chain of retrieval ->
-                      host sync -> utility dispatch -> host sync ->
-                      selection dispatch.
+  * ``fused``       — ONE jitted dispatch: retrieval + per-model utility +
+                      confidence + per-request-lambda selection (sharded
+                      over the host's devices when more than one is visible
+                      — bitwise-identical, batch-axis parallelism only);
+  * ``host_gather`` — retrieval via the CPU inverted traversal (or the
+                      separate exact-scan dispatch on ``index="exact"``),
+                      then the same fused decision tail: 2 dispatches;
+  * ``staged``      — retrieval via the jitted XLA tile twin (host tile
+                      planning + one device scoring dispatch), then the
+                      fused tail.
 
-plus p99, routed-queries/sec, a batch-size sweep (micro-batch amortization
-of the fixed dispatch cost), the streaming operating points (delta tier at
-2/5/10% of the corpus, PROBED on the fused path vs exact-scanned on the
-legacy path), and the retrieval recall@k of the fused backend so the speed
+The measured grid is then handed to `fit_dispatch_policy`: per cell the
+argmin-p50 backend wins, the batch-amortization curve yields the
+`MicroBatcher` wave-close constants, and the autotuned kernel tile sweep
+(`repro.kernels.knn_ivf.autotune`: ``lane_pad`` / ``block_q`` /
+``probe_chunk``) rides along.  The fitted policy is applied to the routers
+and every (index x batch) cell is RE-measured with the policy active —
+``policy_check`` in the JSON records, per cell, the chosen backend and how
+close the policy-served p50 lands to the best measured backend.
+
+Also reported: p99, routed-queries/sec, the streaming operating points
+(delta tier at 2/5/10% of the corpus, PROBED on the fused path vs
+exact-scanned on the host path — these become the policy's delta-fraction
+axis), micro-batch coalescing at the policy's wave target, and the
+retrieval recall@k of the fused, host_gather, and exact paths so the speed
 numbers are pinned at unchanged quality.
 
-``--quick`` shrinks the corpus for CI; ``--check`` asserts the fused path
-is no slower than the host-gather path (the cheap regression guard CI
-runs); ``--emit-bench PATH`` writes the machine-readable snapshot
+``--quick`` shrinks the corpus for CI; ``--check`` asserts the PER-CELL
+regression guard: for every (index x batch) cell the policy-chosen
+backend's re-measured p50 must land within 1.05x (plus a 1ms noise floor)
+of the best measured backend for THAT cell — the old global
+``fused <= host_gather`` assertion was wrong on two of the three index
+kinds (fused is ~3x faster for IVF-PQ but 0.91x/0.83x for raw IVF / exact)
+and is kept only scoped to IVF-PQ, where fused genuinely wins.
+``--emit-bench PATH`` writes the machine-readable snapshot
 (`BENCH_serving.json`).
 
 Env knobs: REPRO_SERVE_N (rows, default 100_000), REPRO_SERVE_D (dim, 64),
@@ -53,7 +69,9 @@ import jax
 import numpy as np
 
 from repro.core.dataset import RoutingDataset
+from repro.core.routers.dispatch import EXEC_BACKEND, fit_dispatch_policy
 from repro.core.routers.knn import KNNRouter
+from repro.kernels.knn_ivf.autotune import autotune_lane_pad, autotune_router
 from repro.kernels.knn_topk.ops import knn_topk
 from repro.serving.router_service import RouterService
 
@@ -62,6 +80,15 @@ from .common import (RESULTS, Timer, clustered_corpus,
 
 STREAM_FRACS = (0.02, 0.05, 0.10)
 MODELS = ["model-a", "model-b"]
+
+#: serving strategies measured per index kind (exact has no tiled plan, and
+#: its ``staged`` strategy IS the host_gather separate-dispatch path)
+CANDIDATES = {"ivfpq": ("fused", "host_gather", "staged"),
+              "ivf": ("fused", "host_gather", "staged"),
+              "exact": ("fused", "host_gather")}
+#: per-cell guard tolerance: policy-served p50 vs best measured backend
+CHECK_SLACK_X = 1.05
+CHECK_SLACK_S = 1e-3
 
 
 def _pcts(fn, repeats):
@@ -89,6 +116,19 @@ def _routing_ds(sup, seed):
         MODELS, train_idx=idx, val_idx=idx[:0], test_idx=idx[:0])
 
 
+def _measure_cell(svc, router, pb, batch, lam_b, qmesh, repeats):
+    """p50/p99 of one (backend x batch) cell through `route_fused` with the
+    execution backend forced — every cell pays the same entry-point
+    overhead, so the numbers are comparable Pareto points."""
+    router.backend = EXEC_BACKEND[pb]
+    try:
+        qm = qmesh if pb == "fused" else None
+        return _pcts(lambda: svc.route_fused(batch, lam_b, qmesh=qm),
+                     repeats)
+    finally:
+        router.backend = None
+
+
 def run(seed: int = 0, emit: str | None = None, quick: bool = False,
         check: bool = False):
     n = int(os.environ.get("REPRO_SERVE_N", 8_000 if quick else 100_000))
@@ -111,6 +151,7 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
                + rng.normal(size=(q_n, d))).astype(np.float32)
     ds = _routing_ds(sup, seed)
     lam_vec = rng.uniform(0.0, 1.0, q_n).astype(np.float32)
+    batches = sorted({b for b in (1, 8, 64, q_n) if b <= q_n})
 
     import jax.numpy as jnp
     qn_j = jnp.asarray(queries / np.linalg.norm(queries, axis=1,
@@ -120,79 +161,108 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
         k)
     exact_sets = [set(r) for r in np.asarray(exact_idx)]
 
-    engines = {m: None for m in MODELS}
+    engines = {mn: None for mn in MODELS}
     rows = []
     out = {"bench": "serving", "n_rows": n, "dim": d, "batch": q_n, "k": k,
            "pq_m": m, "models": len(MODELS), "devices": len(devs),
-           "backends": {}}
+           "backends": {}, "grid": []}
 
-    def measure_route(svc, fused: bool, batch):
-        if fused:
-            return _pcts(lambda: svc.route_fused(batch, lam, qmesh=qmesh),
-                         repeats)
-        return _pcts(lambda: svc.route_legacy(batch, lam), repeats)
-
-    # ---- per-backend fused vs host-gather at the headline batch ----
+    # ---- the measured Pareto grid: (index x batch x backend) cells ----
+    routers, services = {}, {}
+    measured = []
     for index in ("ivfpq", "ivf", "exact"):   # exact last: its
         # (Q, N) sims buffers churn the allocator and inflate
         # the variance of whatever is timed after it
         kw = {"m": m} if index == "ivfpq" else {}
         with Timer() as t_fit:
             router = KNNRouter(k=k, index=index, **kw).fit(ds, seed=seed)
-        svc = RouterService(router, engines, lam=lam)
-        entry = {}
-        p50_f, p99_f = measure_route(svc, True, queries)
-        entry["fused"] = {"p50_route_s": round(p50_f, 6),
-                          "p99_route_s": round(p99_f, 6),
-                          "routed_qps": round(q_n / p50_f, 1)}
-        rows.append([index, "fused", q_n, 0.0, round(p50_f, 5),
-                     round(p99_f, 5), round(q_n / p50_f, 1)])
-        # host-gather legacy baseline (for exact the retrieval is already
-        # one jit — the legacy chain still pays the extra dispatches)
-        router.backend = "host" if index != "exact" else None
-        router._dev = {}
-        p50_h, p99_h = measure_route(svc, False, queries)
-        entry["host_gather"] = {"p50_route_s": round(p50_h, 6),
-                                "p99_route_s": round(p99_h, 6),
-                                "routed_qps": round(q_n / p50_h, 1)}
-        entry["speedup_fused_vs_host"] = round(p50_h / max(p50_f, 1e-12), 2)
-        rows.append([index, "host_gather", q_n, 0.0, round(p50_h, 5),
-                     round(p99_h, 5), round(q_n / p50_h, 1)])
-        router.backend = None
-        router._dev = {}
+        routers[index] = router
+        services[index] = svc = RouterService(router, engines, lam=lam)
         if index == "ivfpq":
+            out["fit_s"] = round(t_fit.dt, 2)
+        for b in batches:
+            batch, lam_b = queries[:b], lam_vec[:b]
+            cell = {"index": index, "batch": b, "delta_frac": 0.0,
+                    "backends": {}}
+            for pb in CANDIDATES[index]:
+                p50, p99 = _measure_cell(svc, router, pb, batch, lam_b,
+                                         qmesh, repeats)
+                cell["backends"][pb] = {"p50_s": round(p50, 6),
+                                        "p99_s": round(p99, 6),
+                                        "routed_qps": round(b / p50, 1)}
+                rows.append([index, pb, b, 0.0, round(p50, 5),
+                             round(p99, 5), round(b / p50, 1)])
+            measured.append(cell)
+            best = min(cell["backends"],
+                       key=lambda pb: cell["backends"][pb]["p50_s"])
+            print(f"  serving {index} b={b}: " + "  ".join(
+                f"{pb}={v['p50_s']*1e3:.2f}ms"
+                for pb, v in cell["backends"].items())
+                + f"  -> {best}")
+        out["grid"].append({"index": index, "cells": [
+            c for c in measured if c["index"] == index]})
+
+    # headline-batch summary in the legacy shape (fused vs host_gather at
+    # the largest batch, per index) + retrieval recall per serving path
+    for index in ("ivfpq", "ivf", "exact"):
+        cell = next(c for c in measured
+                    if c["index"] == index and c["batch"] == batches[-1])
+        entry = {}
+        for pb in CANDIDATES[index]:
+            v = cell["backends"][pb]
+            entry[pb] = {"p50_route_s": v["p50_s"], "p99_route_s": v["p99_s"],
+                         "routed_qps": v["routed_qps"]}
+        entry["speedup_fused_vs_host"] = round(
+            cell["backends"]["host_gather"]["p50_s"]
+            / max(cell["backends"]["fused"]["p50_s"], 1e-12), 2)
+        router = routers[index]
+        if index == "exact":
             _, ix = router._neighbors(queries)
             entry["fused"][f"recall_at_{k}"] = recall_at_k(ix, exact_sets, k)
-            out["fit_s"] = round(t_fit.dt, 2)
+        else:
+            _, ix_f = router._neighbors(queries, backend="fused")
+            _, ix_h = router._neighbors(queries, backend="host")
+            entry["fused"][f"recall_at_{k}"] = recall_at_k(ix_f, exact_sets,
+                                                           k)
+            entry["host_gather"][f"recall_at_{k}"] = recall_at_k(
+                ix_h, exact_sets, k)
         out["backends"][index] = entry
-        print(f"  serving {index}: fused p50={p50_f*1e3:.1f}ms "
-              f"host p50={p50_h*1e3:.1f}ms "
+        print(f"  serving {index}: fused p50="
+              f"{entry['fused']['p50_route_s']*1e3:.1f}ms host p50="
+              f"{entry['host_gather']['p50_route_s']*1e3:.1f}ms "
               f"({entry['speedup_fused_vs_host']}x)")
 
     out["ivfpq"] = out["backends"]["ivfpq"]
 
-    # ---- batch-size sweep (fused ivfpq): dispatch amortization ----
-    router = KNNRouter(k=k, index="ivfpq", m=m).fit(ds, seed=seed)
-    svc = RouterService(router, engines, lam=lam)
-    sweep = []
-    for b in (1, 8, 64, q_n):
-        if b > q_n:
-            continue
-        batch = queries[:b]
-        lam_b = lam_vec[:b]   # per-request lambdas: the sweep exercises the
-        p50, p99 = _pcts(     # vector-resolution branch end to end
-            lambda: svc.route_fused(batch, lam_b, qmesh=qmesh), repeats)
-        sweep.append({"batch": b, "p50_route_s": round(p50, 6),
-                      "p99_route_s": round(p99, 6),
-                      "routed_qps": round(b / p50, 1),
-                      "per_request_ms": round(p50 / b * 1e3, 3)})
-        rows.append(["ivfpq", "fused", b, 0.0, round(p50, 5), round(p99, 5),
-                     round(b / p50, 1)])
-        print(f"  serving batch={b}: p50={p50*1e3:.2f}ms "
-              f"qps={b/p50:.0f}")
-    out["batch_sweep"] = sweep
+    # ---- batch-size sweep (fused ivfpq), derived from the grid ----
+    out["batch_sweep"] = [
+        {"batch": c["batch"],
+         "p50_route_s": c["backends"]["fused"]["p50_s"],
+         "p99_route_s": c["backends"]["fused"]["p99_s"],
+         "routed_qps": c["backends"]["fused"]["routed_qps"],
+         "per_request_ms": round(
+             c["backends"]["fused"]["p50_s"] / c["batch"] * 1e3, 3)}
+        for c in measured if c["index"] == "ivfpq"]
+
+    # ---- autotune the kernel tile constants on the real shapes ----
+    at_reps = max(3, repeats // 2)
+    tiles, at_detail = {}, {}
+    for index in ("ivfpq", "ivf"):
+        t = autotune_router(routers[index], queries, repeats=at_reps,
+                            block_qs=(16, 32) if quick else (8, 16, 32, 64),
+                            probe_chunks=(0, 2) if quick else (0, 2, 4))
+        at_detail[index] = t.pop("sweep", {})
+        tiles[index] = t
+    lp = autotune_lane_pad(sup, queries, k, pq=True, m=m,
+                           sample=2_000 if quick else 20_000,
+                           repeats=at_reps)
+    tiles["ivfpq"]["lane_pad"] = lp["chosen"]
+    at_detail["lane_pad"] = lp["candidates"]
+    out["autotune"] = {"tiles": tiles, "sweeps": at_detail}
+    print(f"  serving autotune: tiles={tiles}")
 
     # ---- streaming: probed delta (fused) vs exact scan (host) ----
+    # these cells double as the policy table's delta-fraction axis
     base_frac = 1.0 - max(STREAM_FRACS)
     base_n = int(round(base_frac * n))
     stream_router = KNNRouter(k=k, index="ivfpq", m=m, online=True,
@@ -211,13 +281,21 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
                      rng_s.uniform(0.2, 1.0, (len(chunk), len(MODELS)))
                      .astype(np.float32), recluster=False)
         appended = target
-        p50_f, p99_f = _pcts(
-            lambda: ssvc.route_fused(queries, lam, qmesh=qmesh), repeats)
-        stream_router.backend = "host"
-        stream_router._dev = {}
-        p50_h, _ = _pcts(lambda: ssvc.route_legacy(queries, lam), repeats)
-        stream_router.backend = None
-        stream_router._dev = {}
+        dfrac = stream_router._delta_frac()
+        cell = {"index": "ivfpq", "batch": q_n, "delta_frac": round(dfrac, 6),
+                "backends": {}}
+        p50_f, p99_f = _measure_cell(ssvc, stream_router, "fused", queries,
+                                     lam_vec, qmesh, repeats)
+        p50_h, p99_h = _measure_cell(ssvc, stream_router, "host_gather",
+                                     queries, lam_vec, qmesh, repeats)
+        cell["backends"]["fused"] = {"p50_s": round(p50_f, 6),
+                                     "p99_s": round(p99_f, 6),
+                                     "routed_qps": round(q_n / p50_f, 1)}
+        cell["backends"]["host_gather"] = {"p50_s": round(p50_h, 6),
+                                           "p99_s": round(p99_h, 6),
+                                           "routed_qps": round(q_n / p50_h,
+                                                               1)}
+        measured.append(cell)
         _, ix = stream_router._neighbors(queries)
         cur = sup[:base_n + appended]
         _, ex_i = knn_topk(qn_j, jnp.asarray(
@@ -225,6 +303,7 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
                              1e-12)), k)
         rec = recall_at_k(ix, [set(r) for r in np.asarray(ex_i)], k)
         points.append({"frac_appended": frac, "delta_rows": appended,
+                       "delta_frac": round(dfrac, 6),
                        "fused_probed_p50_s": round(p50_f, 6),
                        "host_exact_scan_p50_s": round(p50_h, 6),
                        f"recall_at_{k}": round(rec, 4),
@@ -233,7 +312,8 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
         rows.append(["ivfpq-stream", "fused", q_n, frac, round(p50_f, 5),
                      round(p99_f, 5), round(q_n / p50_f, 1)])
         rows.append(["ivfpq-stream", "host_gather", q_n, frac,
-                     round(p50_h, 5), "-", round(q_n / p50_h, 1)])
+                     round(p50_h, 5), round(p99_h, 5),
+                     round(q_n / p50_h, 1)])
         print(f"  serving stream frac={frac:.0%}: fused p50={p50_f*1e3:.1f}ms"
               f" (x{p50_f/p50_base:.2f} of base) host p50={p50_h*1e3:.1f}ms "
               f"recall@{k}={rec:.3f}")
@@ -241,10 +321,70 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
                         "base_fused_p50_s": round(p50_base, 6),
                         "points": points}
 
-    # ---- micro-batch coalescing: N singles vs one coalesced wave ----
+    # ---- fit the dispatch policy from the measured Pareto points ----
+    policy = fit_dispatch_policy(
+        measured, tiles=tiles,
+        fitted_from={"n_rows": n, "dim": d, "k": k, "pq_m": m,
+                     "devices": len(devs), "repeats": repeats,
+                     "quick": bool(quick), "seed": seed})
+    out["dispatch_policy"] = policy.to_dict()
+    out["wave"] = {"close_timeout_s": policy.wave_close_timeout_s,
+                   "target_batch": policy.wave_target_batch}
+    print(f"  serving policy: cells={policy.cells} "
+          f"wave=(timeout={policy.wave_close_timeout_s*1e3:.2f}ms, "
+          f"target={policy.wave_target_batch})")
+
+    # ---- re-measure every (index x batch) cell with the policy ACTIVE ----
+    # the guard --check enforces: policy-served p50 within CHECK_SLACK of
+    # the cell's best backend RE-MEASURED BACK-TO-BACK.  The reference is
+    # contemporaneous, not the grid-time number: later phases (the exact
+    # scan's (Q, N) buffers, the streaming corpus) shift the allocator
+    # state enough that cross-phase p50s drift 1.1-1.5x uniformly, which
+    # would fail every cell while the relative backend ordering — the thing
+    # the policy encodes — is unchanged.  The grid-time best is still
+    # reported as ``grid_best_p50_s`` so the drift is visible in the JSON.
+    policy_cells = []
+    for index in ("ivfpq", "ivf", "exact"):
+        router = routers[index]
+        router.dispatch_policy = policy
+        router.backend = None
+        router._dev = {}          # tile constants may change the jit key
+        svc = services[index]
+        for b in batches:
+            batch, lam_b = queries[:b], lam_vec[:b]
+            cell = next(c for c in measured if c["index"] == index
+                        and c["batch"] == b and not c["delta_frac"])
+            best_pb = min(cell["backends"],
+                          key=lambda pb: cell["backends"][pb]["p50_s"])
+            ref, _ = _measure_cell(svc, router, best_pb, batch, lam_b,
+                                   qmesh, repeats)
+            p50, p99 = _pcts(
+                lambda batch=batch, lam_b=lam_b:
+                svc.route_fused(batch, lam_b, qmesh=qmesh), repeats)
+            chosen = policy.backend_for(index, b)
+            policy_cells.append(
+                {"index": index, "batch": b, "chosen": chosen,
+                 "best_measured": best_pb,
+                 "p50_s": round(p50, 6), "best_p50_s": round(ref, 6),
+                 "grid_best_p50_s": cell["backends"][best_pb]["p50_s"],
+                 "within_x": round(p50 / max(ref, 1e-12), 3),
+                 "ok": bool(p50 <= max(ref * CHECK_SLACK_X,
+                                       ref + CHECK_SLACK_S))})
+            rows.append([index, f"policy:{chosen}", b, 0.0, round(p50, 5),
+                         round(p99, 5), round(b / p50, 1)])
+            print(f"  serving policy {index} b={b}: {chosen} "
+                  f"p50={p50*1e3:.2f}ms (best={best_pb} "
+                  f"{ref*1e3:.2f}ms, x{p50/max(ref,1e-12):.2f})")
+    out["policy_check"] = {"slack_x": CHECK_SLACK_X,
+                           "slack_s": CHECK_SLACK_S,
+                           "cells": policy_cells}
+
+    # ---- micro-batch coalescing at the policy's wave target ----
+    svc = services["ivfpq"]
     single = queries[:1]
     p50_one, _ = _pcts(lambda: svc.route_fused(single, lam), repeats)
-    wave = queries[:64] if q_n >= 64 else queries
+    wn = min(policy.wave_target_batch or 64, q_n)
+    wave = queries[:wn]
     p50_wave, _ = _pcts(lambda: svc.route_fused(wave, lam, qmesh=qmesh),
                         repeats)
     out["coalescing"] = {
@@ -268,10 +408,22 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
         print(f"  [bench] {emit}")
 
     if check:
+        # per-cell guard: the policy-chosen backend must serve each
+        # (index x batch) cell within slack of the best measured backend —
+        # scoped per backend, unlike the old global fused<=host assertion
+        # that was simply false for raw IVF and exact
+        bad = [c for c in policy_cells if not c["ok"]]
+        assert not bad, (
+            "dispatch policy missed the per-cell envelope: " + "; ".join(
+                f"{c['index']}/b{c['batch']} chose {c['chosen']} "
+                f"({c['p50_s']}s vs best {c['best_measured']} "
+                f"{c['best_p50_s']}s, x{c['within_x']})" for c in bad))
+        # the fused-wins floor, now scoped to the one index kind where
+        # fused genuinely wins (the policy's chosen backend for ivfpq)
         pq = out["backends"]["ivfpq"]
         assert (pq["fused"]["p50_route_s"]
                 <= pq["host_gather"]["p50_route_s"]), (
-            f"fused path regressed past the host-gather baseline: "
+            f"ivfpq fused path regressed past its host-gather baseline: "
             f"{pq['fused']['p50_route_s']}s > "
             f"{pq['host_gather']['p50_route_s']}s")
         last = out["streaming"]["points"][-1]
@@ -279,8 +431,13 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
                 <= last["host_exact_scan_p50_s"] * 1.05), (
             "probed delta tier slower than the exact scan it replaces: "
             f"{last}")
-        print("  serving --check: fused <= host_gather OK, "
-              "probed <= exact-scan OK")
+        rec_f = pq["fused"][f"recall_at_{k}"]
+        rec_h = pq["host_gather"][f"recall_at_{k}"]
+        assert abs(rec_f - rec_h) <= 0.02, (
+            f"host_gather recall diverged from fused: {rec_h} vs {rec_f}")
+        print(f"  serving --check: {len(policy_cells)} policy cells within "
+              f"x{CHECK_SLACK_X} of best OK, ivfpq fused <= host OK, "
+              "probed <= exact-scan OK, recall parity OK")
     return rows
 
 
@@ -289,8 +446,9 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="small corpus (CI shapes)")
     ap.add_argument("--check", action="store_true",
-                    help="assert fused p50 <= host-gather p50 (regression "
-                         "guard)")
+                    help="per-cell regression guard: every (index x batch) "
+                         "cell served by the fitted policy must land within "
+                         "1.05x of its best measured backend")
     ap.add_argument("--emit-bench", default=None, metavar="PATH",
                     help="write the machine-readable snapshot, e.g. "
                          "BENCH_serving.json")

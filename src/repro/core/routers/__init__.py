@@ -17,6 +17,7 @@ from .bandit import LinUCBRouter
 from .spec import (RouterSpec, build_registry, format_spec, make_router,
                    paper_order, parse_spec, spec_of)
 from .artifacts import load_router, save_router
+from .dispatch import DispatchPolicy, fit_dispatch_policy
 
 #: canonical spec name -> zero-arg factory, one entry per registered variant
 REGISTRY = build_registry()
@@ -28,4 +29,5 @@ __all__ = ["Router", "KNNRouter", "LinearRouter", "LinearMFRouter",
            "MLPMFRouter", "MLPRouter", "GraphRouter", "AttentiveRouter",
            "DoubleAttentiveRouter", "LinUCBRouter", "REGISTRY",
            "PAPER_ORDER", "RouterSpec", "make_router", "parse_spec",
-           "format_spec", "spec_of", "save_router", "load_router"]
+           "format_spec", "spec_of", "save_router", "load_router",
+           "DispatchPolicy", "fit_dispatch_policy"]

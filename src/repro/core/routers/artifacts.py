@@ -34,6 +34,11 @@ import numpy as np
 
 from .spec import FAMILIES, router_config, spec_of
 
+#: 5 embeds the fitted serving `DispatchPolicy` in the manifest (a
+#: ``dispatch_policy`` JSON object: the measured backend table, wave-close
+#: constants, and autotuned kernel tiles — see `repro.core.routers.dispatch`)
+#: so a server boots already tuned; artifacts without the key (every
+#: version<=4 file) load with no policy and keep the static defaults.
 #: 4 stores the packed PQ code lists CODE-MAJOR (``codes_cm`` is
 #: ``(C, MB, L)`` — the lane-efficient layout the serving hot path and the
 #: reworked Pallas ADC kernel read directly); version<=3 artifacts hold the
@@ -42,9 +47,10 @@ from .spec import FAMILIES, router_config, spec_of
 #: ``base/`` prefix, pending delta rows/assignments, delta_cap, append and
 #: re-cluster counters, and the re-build parameters a compaction replays);
 #: 2 added the IVF-PQ index fields (anchors, packed codes, codebooks, cold
-#: raw rows); version-1/2/3 artifacts remain readable — restore is field-set
-#: driven, not version-switched, plus the one layout transpose above.
-FORMAT_VERSION = 4
+#: raw rows); version-1/2/3/4 artifacts remain readable — restore is
+#: field-set driven, not version-switched, plus the one layout transpose
+#: above.
+FORMAT_VERSION = 5
 MIN_FORMAT_VERSION = 1
 _IVF_FIELDS = ("centroids", "sup_cm", "ids_cm", "inv_cm", "n_rows")
 _IVFPQ_FIELDS = ("centroids", "anchors", "codes_cm", "ids_cm", "inv_cm",
@@ -234,6 +240,9 @@ def save_router(router, path) -> Path:
         "model_names": list(router.model_names),
         "fit_seed": router.fit_seed,
         "default_lam": router.default_lam,
+        "dispatch_policy": pol.to_dict()
+        if (pol := getattr(router, "dispatch_policy", None)) is not None
+        else None,
     }
     (path / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
     return path
@@ -270,4 +279,9 @@ def load_router(path):
     router.embed_dim = manifest["embedding_dim"]
     router.fit_seed = manifest["fit_seed"]
     router.default_lam = float(manifest.get("default_lam", 0.0))
+    pol = manifest.get("dispatch_policy")
+    if pol:
+        # version>=5; absent/None on older artifacts -> static defaults
+        from .dispatch import DispatchPolicy
+        router.dispatch_policy = DispatchPolicy.from_dict(pol)
     return router

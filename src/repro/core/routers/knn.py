@@ -29,6 +29,12 @@ the FUSED single-dispatch path (probe + ADC + shortlist + exact re-rank in
 one jitted call), raw IVF through the host inverted traversal whose
 read-each-list-once BLAS is its fastest CPU operating point; ``host`` /
 ``tiles`` / ``pallas`` stay addressable for debugging and TPU runs.
+A fitted `DispatchPolicy` (``router.dispatch_policy``, persisted with the
+artifact and fitted by ``benchmarks/serving_latency.py``) overrides the
+static default PER BATCH on the serving path: `resolve_backend` looks up
+the measured-fastest backend for (index kind, batch size, delta fraction),
+so e.g. a batch of one can take the staged host path while a 64-wave takes
+the fused one.  An explicit ``backend=`` always wins over the policy.
 
 Streaming updates: ``partial_fit(X, scores, costs)`` appends observations to
 the support arrays — for a non-parametric router that IS the whole training
@@ -201,6 +207,10 @@ class KNNRouter(Router):
         self.online = bool(online)
         self.delta_cap = int(delta_cap)
         self.backend = backend
+        #: fitted `DispatchPolicy` (or None = static defaults) — set by the
+        #: serving benchmark / artifact load, not a constructor parameter,
+        #: so spec strings and ``router_config`` stay policy-free
+        self.dispatch_policy = None
         self._dev = {}           # device-resident (S, C) + serve-path cache
         suffix = {"exact": "", "ivf": " IVF", "ivfpq": " IVF-PQ"}[index]
         self.name = f"kNN (k={k}){suffix}"
@@ -219,6 +229,48 @@ class KNNRouter(Router):
             return "pallas"
         return "fused" if self.index == "ivfpq" else "host"
 
+    # ---- measured dispatch policy ----
+    def _policy_tiles(self) -> dict:
+        """Autotuned kernel constants for this index kind from the fitted
+        dispatch policy ({} when no policy / nothing tuned)."""
+        pol = getattr(self, "dispatch_policy", None)
+        return pol.tiles_for(self.index) if pol is not None else {}
+
+    def _delta_frac(self) -> float:
+        """Fraction of served rows currently in the streaming delta tier —
+        the policy table's third axis (probed delta sub-lists shift the
+        fused/staged crossover)."""
+        ivf = getattr(self, "_ivf", None)
+        if isinstance(ivf, DynamicIVFIndex) and ivf.n_rows:
+            return ivf.delta_rows / ivf.n_rows
+        return 0.0
+
+    def resolve_backend(self, n_queries: int | None = None) -> str:
+        """Effective serving backend for a batch of ``n_queries``: an
+        explicit ``backend=`` always wins, then ``use_pallas``, then the
+        fitted `DispatchPolicy` cell for (index, batch, delta fraction),
+        then the static per-index default (`exec_backend`, with the exact
+        scan defaulting to its in-jit fused search)."""
+        if self.backend is not None:
+            return self.backend
+        if self.use_pallas:
+            return "pallas"
+        pol = getattr(self, "dispatch_policy", None)
+        if pol is not None and n_queries:
+            be = pol.exec_backend_for(self.index, int(n_queries),
+                                      self._delta_frac())
+            if be is not None:
+                return be
+        return "fused" if self.index in ("ivfpq", "exact") else "host"
+
+    def join_recluster(self) -> None:
+        """Block until any in-flight background index compaction has swapped
+        in (no-op otherwise) — the teardown hook `RouterService.close` calls
+        so process exit cannot race a daemon-thread rebuild."""
+        ivf = getattr(self, "_ivf", None)
+        if isinstance(ivf, DynamicIVFIndex):
+            ivf.join_recluster()
+
     # ---- fit = store the support set (+ coarse quantizer / PQ codebooks) --
     def _index_build_kw(self, seed: int) -> dict:
         """Builder kwargs a `DynamicIVFIndex` re-cluster must replay so the
@@ -226,6 +278,9 @@ class KNNRouter(Router):
         kw = {"n_clusters": self.n_clusters, "seed": seed}
         if self.index == "ivfpq":
             kw.update(m=self.m, nbits=self.nbits)
+        lp = self._policy_tiles().get("lane_pad")
+        if lp:
+            kw["lane_pad"] = int(lp)
         return kw
 
     def fit(self, ds: RoutingDataset, seed: int = 0) -> "KNNRouter":
@@ -235,12 +290,18 @@ class KNNRouter(Router):
         self._X = normalize_rows(X)
         self._S = S.astype(np.float32)
         self._C = C.astype(np.float32)
+        # a policy-tuned lane_pad applies at build time too, so a streaming
+        # re-cluster (which replays _index_build_kw) stays bitwise-equal to
+        # this fresh build
+        lp = self._policy_tiles().get("lane_pad")
+        lane = {"lane_pad": int(lp)} if lp else {}
         if self.index == "ivf":
-            self._ivf = build_ivf_index(self._X, self.n_clusters, seed=seed)
+            self._ivf = build_ivf_index(self._X, self.n_clusters, seed=seed,
+                                        **lane)
         elif self.index == "ivfpq":
             self._ivf = build_ivfpq_index(self._X, self.n_clusters,
                                           m=self.m, nbits=self.nbits,
-                                          seed=seed)
+                                          seed=seed, **lane)
         if self.online and self.index != "exact":
             self._ivf = DynamicIVFIndex(self._ivf, delta_cap=self.delta_cap,
                                         build_kw=self._index_build_kw(seed))
@@ -311,9 +372,18 @@ class KNNRouter(Router):
         """Rows currently backing retrieval (grows under partial_fit)."""
         return 0 if getattr(self, "_S", None) is None else len(self._S)
 
-    def _neighbors(self, X: np.ndarray):
+    def _neighbors(self, X: np.ndarray, backend: str | None = None):
+        """One retrieval pass.  ``backend`` overrides the static
+        `exec_backend` for this call (the serving path passes the policy-
+        resolved backend through here); the tiles/pallas plans additionally
+        pick up an autotuned ``block_q`` from the policy."""
         q = normalize_rows(X)
         k = min(self.k, len(self._X))
+        be = backend or self.exec_backend
+        kw = {}
+        bq = self._policy_tiles().get("block_q")
+        if bq and be in ("tiles", "pallas"):
+            kw["block_q"] = int(bq)
         if self.index == "ivfpq":
             if self.mesh is not None:
                 from ..sharded_knn import sharded_ivfpq_topk
@@ -324,7 +394,7 @@ class KNNRouter(Router):
                 sims, idx = ivfpq_topk(jnp.asarray(q), self._ivf, k,
                                        nprobe=self.nprobe,
                                        rerank=self.rerank,
-                                       backend=self.exec_backend)
+                                       backend=be, **kw)
         elif self.index == "ivf":
             if self.mesh is not None:
                 from ..sharded_knn import sharded_ivf_topk
@@ -333,7 +403,7 @@ class KNNRouter(Router):
             else:
                 sims, idx = ivf_topk(jnp.asarray(q), self._ivf, k,
                                      nprobe=self.nprobe,
-                                     backend=self.exec_backend)
+                                     backend=be, **kw)
         elif self.mesh is not None:
             from ..sharded_knn import sharded_knn_topk
             sims, idx = sharded_knn_topk(jnp.asarray(q), jnp.asarray(self._X),
@@ -415,15 +485,20 @@ class KNNRouter(Router):
         return s_hat, c_hat, kth, agree
 
     # ---- fused single-dispatch serving path ----
-    def _fused_search(self):
+    def _fused_search(self, eff: str | None = None):
         """(search_partial, array_args) for the single-dispatch retrieval
         this router's configuration supports, or (None, None) when retrieval
         needs a host stage (raw-IVF host traversal, pallas tile planning, an
-        index-sharding mesh).  The partial is cached per static
-        configuration so the jit cache is keyed by a stable object."""
+        index-sharding mesh).  ``eff`` is the resolved serving backend for
+        the batch at hand (defaults to the static `exec_backend`, so
+        non-serving callers see the old behaviour).  The partial is cached
+        per static configuration so the jit cache is keyed by a stable
+        object."""
+        if eff is None:
+            eff = self.exec_backend
         if self.mesh is not None:
             return None, None
-        if self.index != "exact" and self.exec_backend != "fused":
+        if self.index != "exact" and eff != "fused":
             return None, None
         if self.index == "exact":
             k = min(self.k, len(self._X))
@@ -459,13 +534,15 @@ class KNNRouter(Router):
             k = min(self.k, n, cand)
             kk = (min(max(self.rerank, 1) * k, n, cand)
                   if self.rerank else 0)
-            key = ("ivfpq", delta > 0, k, kk, nprobe, base.m, base.nbits, lc)
+            pc = int(self._policy_tiles().get("probe_chunk", 0) or 0)
+            key = ("ivfpq", delta > 0, k, kk, nprobe, base.m, base.nbits, lc,
+                   pc)
             if self._dev.get("search_key") != key:
                 fn = (_fused_dyn_ivfpq_topk_impl if delta
                       else _fused_ivfpq_topk_impl)
                 self._dev["search"] = functools.partial(
                     fn, k=k, kk=kk, nprobe=nprobe, m=base.m,
-                    nbits=base.nbits)
+                    nbits=base.nbits, pc=pc)
                 self._dev["search_key"] = key
             args = (base.centroids, base.codes_rm, base.ids_cm, base.inv_cm,
                     base.anchors, base.codebooks)
@@ -503,12 +580,26 @@ class KNNRouter(Router):
 
         ``qmesh``: optional mesh to shard the BATCH axis over (replicated
         index) — bitwise-identical results, near-linear scaling for the
-        gather-bound fused search."""
+        gather-bound fused search.
+
+        The retrieval stage is chosen PER BATCH by `resolve_backend`: with
+        a fitted dispatch policy a batch lands on the measured-fastest
+        backend for its (index kind, size, delta fraction) cell — fused
+        stays one dispatch, the host/tiles choices keep their retrieval
+        stage and fuse everything after it (`_serve_tail_jit`), and on
+        ``index="exact"`` a non-fused cell routes the brute-force scan as
+        its own dispatch ahead of the same tail.  Decisions are identical
+        across cells; only the latency profile differs."""
+        X = np.atleast_2d(np.asarray(X, np.float32))
         lam_j = jnp.asarray(np.asarray(lam, np.float32))
         S, C = self._SC_dev()
-        search, args = self._fused_search()
+        eff = self.resolve_backend(len(X))
+        if self.index == "exact" and eff not in ("fused", "pallas"):
+            search, args = None, None
+        else:
+            search, args = self._fused_search(eff)
         if search is None:
-            sims, idx = self._neighbors(X)
+            sims, idx = self._neighbors(X, backend=eff)
             out = _serve_tail_jit(jnp.asarray(sims), jnp.asarray(idx), S, C,
                                   lam_j, weights=self.weights,
                                   temperature=float(self.temperature))

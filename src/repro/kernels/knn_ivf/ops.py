@@ -1046,7 +1046,7 @@ def _rerank_stored_inv(qf, sup_flat, inv_flat, shortlist_idx, k: int):
 
 
 def _adc_probe_scan(qf, probe, lut_flat, codes_rm, ids_cm, inv_cm, anchors,
-                    m: int, nbits: int):
+                    m: int, nbits: int, pc: int = 0):
     """ADC-score every row of the probed lists: gather the ROW-MAJOR packed
     blocks (``codes_rm`` — the derived gather-friendly mirror of the
     code-major storage) per query, sum LUT entries with ONE flat `jnp.take`
@@ -1054,9 +1054,22 @@ def _adc_probe_scan(qf, probe, lut_flat, codes_rm, ids_cm, inv_cm, anchors,
     a per-subspace take_along_axis loop, and the m codes of a row stay
     adjacent so the reduce runs over the minor axis), add the anchor dot,
     scale by the exact stored inverse norms.  Returns (sims (Q, P*L),
-    ids (Q, P*L)) with -inf / -1 on padding rows."""
+    ids (Q, P*L)) with -inf / -1 on padding rows.
+
+    ``pc`` (codes-per-block granularity, an autotunable): process the probe
+    axis in chunks of ``pc`` lists, bounding the peak ``(Q, pc, L, m)``
+    unpacked-code temporary instead of materializing all ``nprobe`` lists'
+    codes at once — a static python loop, so the whole scan still lowers
+    into one fused computation.  ``0`` scans every probed list in one
+    chunk (the widest temporary, fewest fused loop nests)."""
     qn = qf.shape[0]
     p = probe.shape[1]
+    if pc and pc < p:
+        parts = [_adc_probe_scan(qf, probe[:, i:i + pc], lut_flat, codes_rm,
+                                 ids_cm, inv_cm, anchors, m, nbits)
+                 for i in range(0, p, pc)]
+        return (jnp.concatenate([s for s, _ in parts], axis=1),
+                jnp.concatenate([i for _, i in parts], axis=1))
     l = codes_rm.shape[1]
     kb = 2 ** nbits
     codes = pqmod.unpack_codes_jnp(
@@ -1135,17 +1148,20 @@ def _fused_dyn_ivf_topk_impl(queries, centroids, sup_cm, ids_cm, inv_cm,
 
 def _fused_ivfpq_topk_impl(queries, centroids, codes_cm, ids_cm, inv_cm,
                            anchors, codebooks, sup_flat, inv_flat, k: int,
-                           kk: int, nprobe: int, m: int, nbits: int):
+                           kk: int, nprobe: int, m: int, nbits: int,
+                           pc: int = 0):
     """Single-dispatch two-stage IVF-PQ search: in-jit probe, flat-take ADC
     scan of the probed code-major lists, global top-``kk`` shortlist, and
     the exact re-rank folded into the SAME dispatch (a jitted `take` of the
     cold rows + one batched matvec against the stored inverse norms).
-    ``kk=0`` skips stage 2 and returns raw ADC order."""
+    ``kk=0`` skips stage 2 and returns raw ADC order; ``pc`` chunks the ADC
+    scan's probe axis (see `_adc_probe_scan` — an autotuned constant the
+    dispatch policy records)."""
     qf = queries.astype(jnp.float32)
     probe = ivf_probe(qf, centroids, nprobe)
     lut = _adc_lut_flat(qf, codebooks, m, nbits)
     sims, ids = _adc_probe_scan(qf, probe, lut, codes_cm, ids_cm, inv_cm,
-                                anchors, m, nbits)
+                                anchors, m, nbits, pc)
     if not kk:
         sc, pos = jax.lax.top_k(sims, k)
         ix = jnp.take_along_axis(ids, pos, axis=1)
@@ -1159,7 +1175,7 @@ def _fused_ivfpq_topk_impl(queries, centroids, codes_cm, ids_cm, inv_cm,
 def _fused_dyn_ivfpq_topk_impl(queries, centroids, codes_cm, ids_cm, inv_cm,
                                anchors, codebooks, dl_codes, dl_ids, dl_inv,
                                sup_all, inv_all, k: int, kk: int, nprobe: int,
-                               m: int, nbits: int):
+                               m: int, nbits: int, pc: int = 0):
     """`_fused_ivfpq_topk` plus the PROBED delta tier: appended rows live in
     per-centroid sub-lists ENCODED with the existing codebooks, so they join
     the same ADC scan (and the same shortlist selection), and the combined
@@ -1170,9 +1186,9 @@ def _fused_dyn_ivfpq_topk_impl(queries, centroids, codes_cm, ids_cm, inv_cm,
     probe = ivf_probe(qf, centroids, nprobe)
     lut = _adc_lut_flat(qf, codebooks, m, nbits)
     sims_b, ids_b = _adc_probe_scan(qf, probe, lut, codes_cm, ids_cm, inv_cm,
-                                    anchors, m, nbits)
+                                    anchors, m, nbits, pc)
     sims_d, ids_d = _adc_probe_scan(qf, probe, lut, dl_codes, dl_ids, dl_inv,
-                                    anchors, m, nbits)
+                                    anchors, m, nbits, pc)
     sims = jnp.concatenate([sims_b, sims_d], axis=1)
     ids = jnp.concatenate([ids_b, ids_d], axis=1)
     if not kk:
@@ -1195,9 +1211,9 @@ _fused_ivf_topk = functools.partial(jax.jit, static_argnames=(
 _fused_dyn_ivf_topk = functools.partial(jax.jit, static_argnames=(
     "k", "nprobe"))(_fused_dyn_ivf_topk_impl)
 _fused_ivfpq_topk = functools.partial(jax.jit, static_argnames=(
-    "k", "kk", "nprobe", "m", "nbits"))(_fused_ivfpq_topk_impl)
+    "k", "kk", "nprobe", "m", "nbits", "pc"))(_fused_ivfpq_topk_impl)
 _fused_dyn_ivfpq_topk = functools.partial(jax.jit, static_argnames=(
-    "k", "kk", "nprobe", "m", "nbits"))(_fused_dyn_ivfpq_topk_impl)
+    "k", "kk", "nprobe", "m", "nbits", "pc"))(_fused_dyn_ivfpq_topk_impl)
 
 
 def _fused_ivf_dispatch(queries, index, k: int, nprobe: int):

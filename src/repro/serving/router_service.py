@@ -30,7 +30,14 @@ the engine list.
 routers exposing ``partial_fit`` (kNN), appending new support rows — and,
 on the approximate backends, delta-tier index entries — in place.  Appends
 never block the request path; index compaction (re-cluster) is amortized
-behind the router's ``delta_cap``.
+behind the router's ``delta_cap``.  Background compactions run on a daemon
+thread — ``close()`` (or using the service as a context manager) joins any
+in-flight rebuild so teardown / artifact saves cannot race the swap.
+
+A router carrying a fitted `DispatchPolicy` (``service.dispatch_policy``)
+serves every ``route_fused`` batch on the measured-fastest backend for its
+(index kind, batch size, delta fraction) cell, and `MicroBatcher.from_policy`
+picks up the policy's wave-close constants.
 """
 from __future__ import annotations
 
@@ -146,6 +153,28 @@ class RouterService:
         """'exact' / 'ivf' / 'ivfpq' for kNN routers, 'n/a' for parametric
         ones."""
         return getattr(self.router, "index", "n/a")
+
+    @property
+    def dispatch_policy(self):
+        """The router's fitted `DispatchPolicy`, or None (static defaults)."""
+        return getattr(self.router, "dispatch_policy", None)
+
+    # ---- lifecycle ----
+    def close(self) -> None:
+        """Join any in-flight background index compaction (daemon-thread
+        re-cluster kicked off by `observe`).  Without this, process teardown
+        or an artifact save can race the atomic index swap; after it, the
+        router holds one consistent (base, delta) pair.  Idempotent — safe
+        to call on routers with no streaming tier."""
+        jr = getattr(self.router, "join_recluster", None)
+        if callable(jr):
+            jr()
+
+    def __enter__(self) -> "RouterService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ---- routing ----
     def _resolve_lam(self, lam, n: int) -> np.ndarray:

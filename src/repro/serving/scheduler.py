@@ -6,20 +6,33 @@ requests accumulate (each with its own per-request lambda) and one
 ``flush()`` routes them all through `RouterService.route_fused` — ONE
 device dispatch for the whole wave, which is what amortizes the fused
 path's fixed dispatch cost when traffic arrives as single requests instead
-of ready-made batches.
+of ready-made batches.  ``submit`` hands back a **stable ticket id** (not a
+queue position — positions go stale the moment a flush truncates the queue
+at ``max_batch``), and ``pop_result(ticket)`` retrieves a routed request's
+result whenever its wave happened to flush.
+
+Wave closing is policy-driven when a fitted `DispatchPolicy` is available
+(`MicroBatcher.from_policy`): the policy's ``wave_target_batch`` — the knee
+of the measured batch-amortization curve — becomes ``max_batch``, and its
+``wave_close_timeout_s`` — the measured single-request dispatch p50 — bounds
+how long a partial wave may be held open.  Holding a wave for at most one
+solo-dispatch time caps an idle stream's latency penalty at ~2x while a
+loaded stream fills the wave long before the timer and gets the full
+measured amortization (~7x at 64).
 
 `WaveScheduler` batches admitted requests into per-engine decode waves with
 FIFO order and slot backpressure.  Deliberately simple and deterministic —
 the policies the paper cares about live in the router; the scheduler's job
 is backpressure.  Constructed with a ``batcher``, every ``tick()`` first
-flushes pending routes and enqueues the results, so the serving loop is
-arrival -> coalesced route -> admission -> decode with no per-request
-dispatches anywhere."""
+flushes pending routes (respecting the batcher's wave-close rule) and
+enqueues the results, so the serving loop is arrival -> coalesced route ->
+admission -> decode with no per-request dispatches anywhere."""
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence
+import time
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from .engine import Request, ServingEngine
 
@@ -34,49 +47,111 @@ class SchedulerStats:
 class MicroBatcher:
     """Coalesce concurrent route requests into one fused dispatch.
 
-    ``submit(text, lam)`` queues a request and returns its position;
+    ``submit(text, lam)`` queues a request and returns a stable ticket id;
     ``flush()`` routes up to ``max_batch`` queued requests with a single
     `RouterService.submit_texts` call (one retrieval + decision dispatch
     for the whole micro-batch, per-request lambdas preserved) and returns
     the `RoutedResult`s in submission order; anything beyond ``max_batch``
-    stays queued for the next wave."""
+    stays queued for the next wave.  Each flushed result is also retained
+    under its ticket until claimed via ``pop_result`` — tickets stay valid
+    across any number of partial flushes.
+
+    ``close_timeout_s`` (usually from `from_policy`) makes ``ready()`` /
+    ``maybe_flush()`` hold a partial wave open until either ``max_batch``
+    requests are pending or the oldest has waited that long; with no
+    timeout configured any pending request makes the wave ready, which is
+    the old always-flush behaviour.  ``clock`` is injectable for tests."""
 
     def __init__(self, service, max_batch: int = 64,
-                 max_new_tokens: int = 8):
+                 max_new_tokens: int = 8,
+                 close_timeout_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.service = service
         self.max_batch = int(max_batch)
         self.max_new_tokens = int(max_new_tokens)
-        self._texts: List[str] = []
-        self._lams: List[Optional[float]] = []
+        self.close_timeout_s = (None if close_timeout_s is None
+                                else float(close_timeout_s))
+        self.clock = clock
+        # (ticket, text, lam, t_submit); tickets are monotonic and never
+        # reused, so they survive partial flushes truncating the queue
+        self._queue: Deque[Tuple[int, str, Optional[float], float]] = \
+            collections.deque()
+        self._results: Dict[int, object] = {}
+        self._next_ticket = 0
         self.flushes = 0          # dispatches actually issued
         self.routed = 0           # requests routed through them
 
+    @classmethod
+    def from_policy(cls, service, max_new_tokens: int = 8,
+                    clock: Callable[[], float] = time.monotonic
+                    ) -> "MicroBatcher":
+        """Build a batcher whose wave-close constants come from the
+        service's fitted `DispatchPolicy` (measured batch-amortization
+        knee + solo-dispatch p50).  Falls back to the static defaults when
+        no policy is fitted or the policy carries no wave constants."""
+        pol = getattr(service, "dispatch_policy", None)
+        kw = {}
+        if pol is not None:
+            if getattr(pol, "wave_target_batch", 0):
+                kw["max_batch"] = int(pol.wave_target_batch)
+            if getattr(pol, "wave_close_timeout_s", 0.0):
+                kw["close_timeout_s"] = float(pol.wave_close_timeout_s)
+        return cls(service, max_new_tokens=max_new_tokens, clock=clock, **kw)
+
     def pending(self) -> int:
-        return len(self._texts)
+        return len(self._queue)
 
     def submit(self, text: str, lam: Optional[float] = None) -> int:
-        self._texts.append(text)
-        self._lams.append(lam)
-        return len(self._texts) - 1
+        """Queue a request; returns its ticket (stable across flushes —
+        claim the result later with ``pop_result(ticket)``)."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, text, lam, self.clock()))
+        return ticket
+
+    def ready(self) -> bool:
+        """Whether the pending wave should close now: always when no
+        timeout is configured, else when it is full (``max_batch``) or its
+        oldest request has waited ``close_timeout_s``."""
+        if not self._queue:
+            return False
+        if self.close_timeout_s is None:
+            return True
+        if len(self._queue) >= self.max_batch:
+            return True
+        return self.clock() - self._queue[0][3] >= self.close_timeout_s
+
+    def maybe_flush(self) -> List:
+        """``flush()`` if the wave-close rule says the wave is ready,
+        else keep accumulating and return []."""
+        return self.flush() if self.ready() else []
 
     def flush(self) -> List:
         """Route the pending wave (up to ``max_batch``) in ONE dispatch."""
-        if not self._texts:
+        if not self._queue:
             return []
         import numpy as np
-        texts, lams = self._texts[:self.max_batch], self._lams[:self.max_batch]
-        self._texts = self._texts[self.max_batch:]
-        self._lams = self._lams[self.max_batch:]
+        wave = [self._queue.popleft()
+                for _ in range(min(self.max_batch, len(self._queue)))]
+        tickets = [w[0] for w in wave]
+        texts = [w[1] for w in wave]
         default = self.service.default_lam
-        lam_vec = np.asarray([default if l is None else float(l)
-                              for l in lams], np.float32)
+        lam_vec = np.asarray([default if w[2] is None else float(w[2])
+                              for w in wave], np.float32)
         results = self.service.submit_texts(
             texts, max_new_tokens=self.max_new_tokens, lam=lam_vec)
+        for t, res in zip(tickets, results):
+            self._results[t] = res
         self.flushes += 1
         self.routed += len(results)
         return results
+
+    def pop_result(self, ticket: int):
+        """Claim (and forget) the `RoutedResult` of a flushed ticket, or
+        None while its wave is still pending."""
+        return self._results.pop(ticket, None)
 
 
 class WaveScheduler:
@@ -107,11 +182,12 @@ class WaveScheduler:
         return n
 
     def tick(self):
-        """One scheduling wave: flush the micro-batcher (one fused routing
-        dispatch for every request that arrived since the last wave), then
-        admit up to free slots per engine and run one decode step each."""
+        """One scheduling wave: flush the micro-batcher when its wave-close
+        rule fires (one fused routing dispatch for every request the wave
+        coalesced), then admit up to free slots per engine and run one
+        decode step each."""
         if self.batcher is not None:
-            for res in self.batcher.flush():
+            for res in self.batcher.maybe_flush():
                 self.enqueue(res.model, res.request)
         for m, eng in self.engines.items():
             q = self.queues[m]

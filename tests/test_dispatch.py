@@ -1,0 +1,303 @@
+"""Dispatch policy: fitting from measured cells, serve-time lookup, artifact
+persistence, tile autotuning, and the policy-driven wave batcher."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import RoutingDataset
+from repro.core.routers import (DispatchPolicy, KNNRouter,
+                                fit_dispatch_policy, load_router,
+                                save_router)
+from repro.core.routers.dispatch import EXEC_BACKEND, POLICY_BACKENDS
+from repro.serving.router_service import RouterService
+from repro.serving.scheduler import MicroBatcher
+
+D = 24
+MODELS = ["m-a", "m-b", "m-c"]
+
+
+def _cell(index, batch, delta=0.0, **p50s):
+    return {"index": index, "batch": batch, "delta_frac": delta,
+            "backends": {b: {"p50_s": v} for b, v in p50s.items()}}
+
+
+MEASURED = [
+    _cell("ivfpq", 1, fused=0.010, host_gather=0.004, staged=0.003),
+    _cell("ivfpq", 64, fused=0.012, host_gather=0.030, staged=0.028),
+    _cell("ivfpq", 64, delta=0.1, fused=0.015, host_gather=0.040),
+    _cell("ivf", 1, fused=0.009, host_gather=0.002),
+    _cell("ivf", 64, fused=0.010, host_gather=0.004, staged=0.013),
+    _cell("exact", 1, fused=0.007, host_gather=0.002),
+    _cell("exact", 64, fused=0.008, host_gather=0.009),
+]
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return fit_dispatch_policy(MEASURED, tiles={"ivfpq": {"probe_chunk": 2}})
+
+
+@pytest.fixture(scope="module")
+def ds():
+    rng = np.random.default_rng(1)
+    n = 400
+    return RoutingDataset(
+        "dispatch", rng.normal(size=(n, D)).astype(np.float32),
+        rng.uniform(0.2, 1.0, (n, 3)).astype(np.float32),
+        rng.uniform(0.001, 0.01, (n, 3)).astype(np.float32), MODELS)
+
+
+@pytest.fixture(scope="module")
+def X(ds):
+    rng = np.random.default_rng(7)
+    return rng.normal(size=(16, D)).astype(np.float32)
+
+
+LAM = np.full(16, 0.5, np.float32)
+
+
+# ---- fitting & lookup ----
+
+def test_fit_picks_argmin_per_cell(policy):
+    assert policy.backend_for("ivfpq", 1) == "staged"
+    assert policy.backend_for("ivfpq", 64) == "fused"
+    assert policy.backend_for("ivf", 64) == "host_gather"
+    assert policy.backend_for("exact", 64) == "fused"
+
+
+def test_lookup_rounds_batch_up_and_saturates(policy):
+    # between measured edges -> next measured cell up
+    assert policy.backend_for("ivfpq", 2) == "fused"
+    # beyond the largest edge -> the coarsest measured cell
+    assert policy.backend_for("ivfpq", 10_000) == "fused"
+    assert policy.backend_for("ivf", 10_000) == "host_gather"
+
+
+def test_lookup_delta_axis(policy):
+    assert policy.backend_for("ivfpq", 64, delta_frac=0.0) == "fused"
+    # a live delta fraction rounds up onto the measured delta cell
+    assert policy.backend_for("ivfpq", 64, delta_frac=0.07) == "fused"
+
+
+def test_unknown_index_keeps_static_default(policy):
+    assert policy.backend_for("hnsw", 8) is None
+    assert policy.exec_backend_for("hnsw", 8) is None
+
+
+def test_exec_backend_mapping(policy):
+    assert set(EXEC_BACKEND) == set(POLICY_BACKENDS)
+    assert policy.exec_backend_for("ivf", 64) == "host"
+    assert policy.exec_backend_for("ivfpq", 64) == "fused"
+    assert policy.exec_backend_for("ivfpq", 1) == "tiles"
+
+
+def test_fit_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown policy backend"):
+        fit_dispatch_policy([_cell("ivf", 1, warp_drive=0.001)])
+
+
+def test_wave_constants_from_amortization_curve(policy):
+    # timeout = best batch=1 p50 of the index with the most batch points
+    # (ivfpq: staged 3ms); target = argmin per-request p50 (batch 64)
+    assert policy.wave_close_timeout_s == pytest.approx(0.003)
+    assert policy.wave_target_batch == 64
+
+
+def test_json_round_trip(policy):
+    blob = json.dumps(policy.to_dict())
+    rt = DispatchPolicy.from_dict(json.loads(blob))
+    assert rt.to_dict() == policy.to_dict()
+    assert rt.backend_for("ivfpq", 1) == "staged"
+    assert rt.tiles_for("ivfpq") == {"probe_chunk": 2}
+    assert rt.tiles_for("ivf") == {}
+
+
+# ---- serve-time resolution ----
+
+def test_resolve_backend_precedence(ds, policy):
+    r = KNNRouter(k=5, index="ivf").fit(ds)
+    assert r.resolve_backend(64) == "host"          # static default
+    r.dispatch_policy = policy
+    assert r.resolve_backend(64) == "host"          # policy agrees here
+    r2 = KNNRouter(k=5, index="ivfpq").fit(ds)
+    r2.dispatch_policy = policy
+    assert r2.resolve_backend(1) == "tiles"         # policy cell
+    assert r2.resolve_backend(64) == "fused"
+    r2.backend = "host"
+    assert r2.resolve_backend(1) == "host"          # explicit backend wins
+    r2.backend = None
+    r2.use_pallas = True
+    assert r2.resolve_backend(1) == "pallas"        # use_pallas beats policy
+
+
+@pytest.mark.parametrize("index", ["exact", "ivf", "ivfpq"])
+def test_policy_routes_bitwise_like_static(ds, X, index, policy):
+    """Whatever backend the policy picks, the decisions are bit-identical
+    to the static default — the policy only moves latency, never answers."""
+    r = KNNRouter(k=5, index=index, m=4).fit(ds)
+    base = r.serve_fused(X, LAM)
+    r.dispatch_policy = policy
+    r._dev = {}
+    for nq in (1, X.shape[0]):
+        out = r.serve_fused(X[:nq], LAM[:nq])
+        for a, b in zip(out, base):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b)[:nq],
+                                       atol=1e-5)
+
+
+def test_probe_chunk_policy_is_bitwise(ds, X):
+    """A policy-tuned fused-scan probe_chunk changes the jit schedule, not
+    the result."""
+    r = KNNRouter(k=5, index="ivfpq", m=4).fit(ds)
+    base = r.serve_fused(X, LAM)
+    r.dispatch_policy = DispatchPolicy(cells={},
+                                       tiles={"ivfpq": {"probe_chunk": 3}})
+    r._dev = {}
+    out = r.serve_fused(X, LAM)
+    for a, b in zip(out, base):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---- artifact persistence (format v5) ----
+
+def test_artifact_round_trips_policy(tmp_path, ds, X, policy):
+    r = KNNRouter(k=5, index="ivfpq", m=4).fit(ds)
+    r.dispatch_policy = policy
+    save_router(r, tmp_path / "art")
+    manifest = json.loads((tmp_path / "art" / "manifest.json").read_text())
+    assert manifest["format_version"] == 5
+    assert manifest["dispatch_policy"] == policy.to_dict()
+    r2 = load_router(tmp_path / "art")
+    assert r2.dispatch_policy.to_dict() == policy.to_dict()
+    for a, b in zip(r.serve_fused(X, LAM), r2.serve_fused(X, LAM)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_artifact_without_policy_loads_none(tmp_path, ds):
+    """A v4-style manifest (no dispatch_policy key) loads with no policy —
+    static defaults, exactly the pre-v5 behaviour."""
+    r = KNNRouter(k=5, index="ivf").fit(ds)
+    save_router(r, tmp_path / "art")
+    mp = tmp_path / "art" / "manifest.json"
+    m = json.loads(mp.read_text())
+    assert m["dispatch_policy"] is None     # nothing fitted -> stored as null
+    del m["dispatch_policy"]
+    m["format_version"] = 4
+    mp.write_text(json.dumps(m))
+    r2 = load_router(tmp_path / "art")
+    assert r2.dispatch_policy is None
+    assert r2.resolve_backend(64) == "host"
+
+
+# ---- autotune ----
+
+def test_autotune_router_smoke(ds):
+    from repro.kernels.knn_ivf.autotune import autotune_router
+    r = KNNRouter(k=5, index="ivfpq", m=4).fit(ds)
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(8, D)).astype(np.float32)
+    t = autotune_router(r, q, repeats=2, block_qs=(16, 32),
+                        probe_chunks=(0, 2))
+    assert t["block_q"] in (16, 32)
+    assert t["probe_chunk"] in (0, 2)
+    assert set(t["sweep"]["block_q"]) == {16, 32}
+    for cand in t["sweep"]["block_q"].values():
+        assert cand["p50_s"] > 0
+    exact = KNNRouter(k=5, index="exact").fit(ds)
+    assert autotune_router(exact, q) == {}
+
+
+# ---- MicroBatcher: stable tickets + policy wave closing ----
+
+class _StubService:
+    """Routes nothing: echoes (text, lam) back so ticket->result mapping is
+    checkable without engines."""
+    default_lam = 0.5
+
+    def submit_texts(self, texts, max_new_tokens=8, lam=None):
+        return [{"text": t, "lam": float(lam[i])}
+                for i, t in enumerate(texts)]
+
+
+def test_tickets_stable_across_partial_flushes():
+    mb = MicroBatcher(_StubService(), max_batch=2)
+    t = [mb.submit(f"q{i}", lam=float(i)) for i in range(5)]
+    assert t == [0, 1, 2, 3, 4]
+    first = mb.flush()                      # wave 1: q0, q1 (truncated)
+    assert [r["text"] for r in first] == ["q0", "q1"]
+    assert mb.pending() == 3
+    t5 = mb.submit("q5")                    # interleaved submit
+    assert t5 == 5
+    mb.flush()                              # wave 2: q2, q3
+    mb.flush()                              # wave 3: q4, q5
+    # every ticket still maps to ITS request, regardless of which wave
+    # flushed it — the old list-position return broke exactly here
+    for i in (0, 1, 2, 3, 4):
+        assert mb.pop_result(t[i]) == {"text": f"q{i}", "lam": float(i)}
+    assert mb.pop_result(t5) == {"text": "q5", "lam": 0.5}
+    assert mb.pop_result(t5) is None        # claimed once
+    assert mb.flushes == 3 and mb.routed == 6 and mb.pending() == 0
+
+
+def test_wave_close_timeout_holds_partial_waves():
+    now = [0.0]
+    mb = MicroBatcher(_StubService(), max_batch=4, close_timeout_s=0.010,
+                      clock=lambda: now[0])
+    mb.submit("a")
+    assert not mb.ready()                   # partial wave, timer running
+    assert mb.maybe_flush() == []
+    now[0] = 0.011
+    assert mb.ready()                       # oldest aged past the timeout
+    assert [r["text"] for r in mb.maybe_flush()] == ["a"]
+    for i in range(4):
+        mb.submit(f"b{i}")
+    assert mb.ready()                       # full wave closes immediately
+    assert len(mb.maybe_flush()) == 4
+
+
+def test_microbatcher_from_policy(policy):
+    svc = _StubService()
+    svc.dispatch_policy = policy
+    mb = MicroBatcher.from_policy(svc)
+    assert mb.max_batch == policy.wave_target_batch == 64
+    assert mb.close_timeout_s == pytest.approx(0.003)
+    svc2 = _StubService()                   # no policy -> static defaults
+    mb2 = MicroBatcher.from_policy(svc2)
+    assert mb2.max_batch == 64 and mb2.close_timeout_s is None
+    assert mb2.ready() is False
+    mb2.submit("x")
+    assert mb2.ready() is True              # no timeout = old always-flush
+
+
+# ---- recluster lifecycle ----
+
+def test_service_close_joins_background_recluster(ds):
+    r = KNNRouter(k=5, index="ivf", online=True, delta_cap=10).fit(ds)
+    svc = RouterService(r, {m: None for m in MODELS}, lam=0.5)
+    rng = np.random.default_rng(9)
+    with svc:
+        svc.observe(rng.normal(size=(12, D)).astype(np.float32),
+                    rng.uniform(0, 1, (12, 3)).astype(np.float32),
+                    recluster="background")
+    ivf = r._ivf
+    assert ivf._rc_thread is None           # close() joined the daemon
+    assert ivf.delta_rows == 0              # compaction landed
+    svc.close()                             # idempotent
+
+
+def test_save_during_background_recluster(tmp_path, ds, X):
+    """An artifact save racing a daemon-thread compaction must capture one
+    consistent index (join first), and the reloaded router must route
+    exactly like the live one after the swap."""
+    r = KNNRouter(k=5, index="ivfpq", m=4, online=True, delta_cap=10).fit(ds)
+    svc = RouterService(r, {m: None for m in MODELS}, lam=0.5)
+    rng = np.random.default_rng(11)
+    svc.observe(rng.normal(size=(12, D)).astype(np.float32),
+                rng.uniform(0, 1, (12, 3)).astype(np.float32),
+                recluster="background")
+    save_router(r, tmp_path / "mid")        # joins the in-flight rebuild
+    svc.close()
+    r2 = load_router(tmp_path / "mid")
+    for a, b in zip(r.serve_fused(X, LAM), r2.serve_fused(X, LAM)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -292,6 +292,27 @@ def test_route_fused_bitwise_parity(ds, index):
         np.testing.assert_array_equal(lf, ll)
 
 
+@pytest.mark.parametrize("index", ["exact", "ivf", "ivfpq"])
+@pytest.mark.parametrize("nq", [1, 5, 13])
+def test_route_fused_odd_batches(ds, index, nq):
+    """batch=1 and batch sizes that are NOT multiples of the query tile
+    must route bitwise like the legacy chain on every backend — the tile
+    plans pad the query axis, and the padding lanes must never leak into
+    real rows."""
+    svc = _service(ds, index)
+    X = ds.part("test")[0][:nq]
+    rng = np.random.default_rng(nq)
+    lam = rng.uniform(0, 2, nq).astype(np.float32)
+    cf, sf, chf, conf_f, lf = svc.route_fused(X, lam)
+    cl, sl, chl, conf_l, ll = svc.route_legacy(X, lam)
+    assert cf.shape == (nq,) and sf.shape[0] == nq
+    np.testing.assert_array_equal(cf, cl)
+    np.testing.assert_array_equal(sf, sl)
+    np.testing.assert_array_equal(chf, chl)
+    np.testing.assert_array_equal(conf_f, conf_l)
+    np.testing.assert_array_equal(lf, ll)
+
+
 def test_route_fused_bitwise_parity_softmax_weights(ds):
     svc = _service(ds, "ivfpq", weights="softmax")
     X = ds.part("test")[0][:16]
