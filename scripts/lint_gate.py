@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""CI lint gate: run the repro.analysis rules (R1–R4) over src/, fail on
+any non-baselined finding, then hand the generic-Python tier to ruff when
+it is installed (CI installs it; the container may not have it).
+
+    PYTHONPATH=src python scripts/lint_gate.py              # gate (CI)
+    PYTHONPATH=src python scripts/lint_gate.py --update-schema-pin
+    PYTHONPATH=src python scripts/lint_gate.py --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.core import write_baseline           # noqa: E402
+from repro.analysis.lint import build_project, lint_tree  # noqa: E402
+from repro.analysis.rules import schema_pin              # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(REPO / "src"),
+                    help="tree to lint (default: src/)")
+    ap.add_argument("--baseline", default=str(
+        REPO / "src/repro/analysis/lint_baseline.txt"))
+    ap.add_argument("--schema-pin", default=None,
+                    help="override the pinned-schema JSON path")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset, e.g. R1,R2")
+    ap.add_argument("--update-schema-pin", action="store_true",
+                    help="re-pin the current artifact schema and exit")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="baseline all current findings and exit")
+    ap.add_argument("--no-ruff", action="store_true")
+    args = ap.parse_args(argv)
+
+    project = build_project(Path(args.root))
+    config = {"baseline": args.baseline, "schema_pin": args.schema_pin}
+
+    if args.update_schema_pin:
+        pin_path = Path(args.schema_pin or schema_pin.default_pin_path())
+        pin_path.write_text(
+            json.dumps(schema_pin.current_schema(project), indent=2) + "\n")
+        print(f"schema pin refreshed: {pin_path}")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    active, suppressed = lint_tree(project, config=config, rules=rules)
+
+    if args.write_baseline:
+        write_baseline(Path(args.baseline), active + suppressed)
+        print(f"baselined {len(active) + len(suppressed)} finding(s): "
+              f"{args.baseline}")
+        return 0
+
+    for f in active:
+        print(f.render())
+    n_mod = len(project.modules)
+    print(f"lint_gate: {len(active)} finding(s) over {n_mod} file(s)"
+          f" ({len(suppressed)} baselined)")
+    if active:
+        return 1
+
+    if not args.no_ruff:
+        ruff = shutil.which("ruff")
+        if ruff is None:
+            print("lint_gate: ruff not installed — generic tier skipped "
+                  "(CI installs it; `pip install ruff` locally)")
+        else:
+            proc = subprocess.run([ruff, "check", args.root, "tests",
+                                   "scripts"], cwd=REPO)
+            if proc.returncode:
+                return proc.returncode
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Static analysis + runtime sanitizers for the serving stack.
+
+The serving claims this repo makes — single-dispatch fused routing, a
+lock-guarded online index, a versioned artifact schema, stable jit caches —
+are invariants, not behaviors a unit test can pin once and forget.  This
+package machine-checks them:
+
+  * `lint` + `rules/` — an AST lint engine with four project rules:
+    R1 no host sync reachable from the fused serving roots,
+    R2 lock discipline on `DynamicIVFIndex` mutable state,
+    R3 artifact-schema drift requires a `FORMAT_VERSION` bump,
+    R4 jit-cache hygiene (no instance-state closures, static args declared).
+  * `sanitizers` — runtime counterparts wired into pytest fixtures: a
+    transfer-guard context, a retrace counter, and a deadlock watchdog.
+
+`scripts/lint_gate.py` runs the lint engine over `src/` in CI and fails on
+any non-baselined finding.  The shipped baseline is empty.
+"""
+from .core import Finding, load_baseline, write_baseline
+from .lint import lint_paths, lint_tree
+
+__all__ = ["Finding", "load_baseline", "write_baseline", "lint_paths",
+           "lint_tree"]

@@ -1,0 +1,54 @@
+"""Lint engine: build the project index, run R1–R4, apply pragmas and the
+baseline.  `scripts/lint_gate.py` is the CLI; tests drive `lint_paths`."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .callgraph import Project, iter_py_files
+from .core import Finding, RULE_PRAGMA, load_baseline
+from .rules import ALL_RULES
+
+
+def build_project(root: Path) -> Project:
+    return Project(root, iter_py_files(root))
+
+
+def lint_tree(project: Project, *, config: Optional[dict] = None,
+              rules: Optional[Sequence[str]] = None
+              ) -> Tuple[List[Finding], List[Finding]]:
+    """-> (active findings, baselined findings), both pragma-filtered."""
+    config = config or {}
+    raw: List[Finding] = []
+    for rule_id, rule_fn in ALL_RULES.items():
+        if rules is not None and rule_id not in rules:
+            continue
+        raw.extend(rule_fn(project, config))
+
+    pragmas: Dict[str, object] = {m.relpath: m.pragmas
+                                  for m in project.modules}
+    findings: List[Finding] = []
+    for f in raw:
+        pr = pragmas.get(f.path)
+        if pr is not None and pr.covers(RULE_PRAGMA.get(f.rule), f.line):
+            continue
+        findings.append(f)
+
+    # a pragma without a justification is itself a finding
+    for relpath, pr in pragmas.items():
+        for lineno in pr.bare:
+            findings.append(Finding(
+                rule="PRAGMA", path=relpath, line=lineno,
+                message="`# repro: allow-*` pragma without a justification "
+                        "(write `# repro: allow-host: <why>`)"))
+
+    baseline = load_baseline(Path(config["baseline"])) \
+        if config.get("baseline") else set()
+    active = [f for f in findings if f.key not in baseline]
+    suppressed = [f for f in findings if f.key in baseline]
+    active.sort(key=lambda f: (f.path, f.line, f.rule))
+    return active, suppressed
+
+
+def lint_paths(root: Path, **kw) -> Tuple[List[Finding], List[Finding]]:
+    return lint_tree(build_project(Path(root)), **kw)

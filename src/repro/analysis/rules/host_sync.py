@@ -1,0 +1,66 @@
+"""R1 — no host synchronization in jit-reachable serving code.
+
+Roots: any function named ``route_fused`` / ``serve_fused`` or starting
+with ``_fused``.  Everything reachable from a root through the call graph
+is serving-hot; inside that set the following force a host round-trip (a
+device sync, an implicit transfer, or both) and are flagged:
+
+  * ``np.asarray(...)`` / ``np.array(...)`` on the numpy module alias
+  * ``<expr>.item()`` and ``<expr>.block_until_ready()``
+  * ``jax.device_get(...)``
+  * ``float(<call or subscript>)`` (coercing a device value; bare
+    ``float(name)`` is too ambiguous to flag)
+
+Intentional host stages — the single end-of-batch materialization, the
+``host_gather`` CPU traversal backends — carry ``# repro: allow-host: why``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..core import Finding
+
+NP_ALIASES = {"np", "numpy"}
+HOST_ATTRS = {"item", "block_until_ready"}
+NP_FUNCS = {"asarray", "array", "ascontiguousarray"}
+
+ROOT_NAMES = {"route_fused", "serve_fused"}
+ROOT_PREFIX = "_fused"
+
+
+def is_root(name: str) -> bool:
+    return name in ROOT_NAMES or name.startswith(ROOT_PREFIX)
+
+
+def _sites(node: ast.AST):
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        fn = sub.func
+        if isinstance(fn, ast.Attribute):
+            recv = fn.value
+            if fn.attr in NP_FUNCS and isinstance(recv, ast.Name) \
+                    and recv.id in NP_ALIASES:
+                yield sub, f"{recv.id}.{fn.attr}"
+            elif fn.attr in HOST_ATTRS and not sub.args:
+                yield sub, f".{fn.attr}()"
+            elif fn.attr == "device_get" and isinstance(recv, ast.Name) \
+                    and recv.id == "jax":
+                yield sub, "jax.device_get"
+        elif isinstance(fn, ast.Name) and fn.id == "float" and sub.args \
+                and isinstance(sub.args[0], (ast.Call, ast.Subscript)):
+            yield sub, "float(...)"
+
+
+def run(project, config) -> List[Finding]:
+    roots = [f for f in project.all_funcs() if is_root(f.name)]
+    reach = project.reachable(roots)
+    findings = []
+    for fn in reach.values():
+        for site, what in _sites(fn.node):
+            findings.append(Finding(
+                rule="R1", path=fn.module.relpath, line=site.lineno,
+                message=f"host sync `{what}` in `{fn.qualname}`, reachable "
+                        f"from the fused serving roots"))
+    return findings

@@ -1,0 +1,128 @@
+"""R4 — jit-cache hygiene.
+
+``jax.jit`` caches compiled executables keyed by argument avals + declared
+static values.  Two classes of bug defeat that cache silently:
+
+  * a jitted callable that closes over mutable state (``self.<attr>``):
+    the closure is baked in at trace time, so later mutation is ignored —
+    the worst kind of stale-cache bug;
+  * a non-array parameter (annotated ``int``/``str``/``bool``) that is not
+    declared in ``static_argnames``/``static_argnums``: jax either retraces
+    per value anyway (weak-type churn) or raises at call time.
+
+Also flagged: constructing ``jax.jit(...)`` inside a function/method body
+(a FRESH cache per call — every invocation recompiles).  Module level and
+``__init__`` (once-per-object) are exempt; deliberately scoped or
+self-cached jits carry ``# repro: allow-jit-cache: why``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..core import Finding
+
+STATIC_ANNOTATIONS = {"int", "str", "bool"}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax") or (
+        isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _jit_decorator(dec: ast.AST) -> Optional[ast.AST]:
+    """The decorator node if it is jax.jit / partial(jax.jit, ...)."""
+    if _is_jax_jit(dec):
+        return dec
+    if isinstance(dec, ast.Call):
+        if _is_jax_jit(dec.func):
+            return dec
+        fn = dec.func
+        is_partial = (isinstance(fn, ast.Name) and fn.id == "partial") or (
+            isinstance(fn, ast.Attribute) and fn.attr == "partial")
+        if is_partial and dec.args and _is_jax_jit(dec.args[0]):
+            return dec
+    return None
+
+
+def _static_names(dec: ast.AST) -> Optional[Set[str]]:
+    """Declared static argnames; None means static_argnums was used (we
+    can't easily map positions, so give the function the benefit)."""
+    if not isinstance(dec, ast.Call):
+        return set()
+    names: Set[str] = set()
+    for kw in dec.keywords:
+        if kw.arg == "static_argnums":
+            return None
+        if kw.arg == "static_argnames":
+            val = kw.value
+            if isinstance(val, ast.Constant) and isinstance(val.value, str):
+                names.add(val.value)
+            elif isinstance(val, (ast.Tuple, ast.List)):
+                names.update(e.value for e in val.elts
+                             if isinstance(e, ast.Constant))
+    return names
+
+
+def _check_jitted_def(fn, node, findings: List[Finding]) -> None:
+    dec = next((d for d in (_jit_decorator(d) for d in node.decorator_list)
+                if d is not None), None)
+    if dec is None:
+        return
+    static = _static_names(dec)
+    if static is not None:
+        args = list(node.args.args) + list(node.args.kwonlyargs)
+        for arg in args:
+            ann = arg.annotation
+            if isinstance(ann, ast.Name) and ann.id in STATIC_ANNOTATIONS \
+                    and arg.arg not in static:
+                findings.append(Finding(
+                    rule="R4", path=fn.module.relpath, line=node.lineno,
+                    message=f"jitted `{node.name}` takes "
+                            f"`{arg.arg}: {ann.id}` but does not declare it "
+                            f"in static_argnames"))
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and \
+                isinstance(sub.value, ast.Name) and sub.value.id == "self":
+            findings.append(Finding(
+                rule="R4", path=fn.module.relpath, line=sub.lineno,
+                message=f"jitted `{node.name}` closes over instance state "
+                        f"`self.{sub.attr}` — mutation after trace is "
+                        f"silently ignored"))
+            break
+
+
+def run(project, config) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        # jitted defs anywhere in the module (incl. nested)
+        seen_nested: Set[ast.AST] = set()
+        for fn in list(mod.funcs.values()) + [
+                m for c in mod.classes.values() for m in c.values()]:
+            _check_jitted_def(fn, fn.node, findings)
+            if fn.name == "__init__":
+                continue
+            for sub in ast.walk(fn.node):
+                if sub is fn.node or sub in seen_nested:
+                    continue
+                # nested jitted def: fresh cache every enclosing call
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and any(_jit_decorator(d) is not None
+                                for d in sub.decorator_list):
+                    seen_nested.add(sub)
+                    findings.append(Finding(
+                        rule="R4", path=mod.relpath, line=sub.lineno,
+                        message=f"jitted def `{sub.name}` nested inside "
+                                f"`{fn.qualname}` — a fresh jit cache per "
+                                f"call"))
+                # inline jax.jit(...) call outside module level / __init__
+                elif isinstance(sub, ast.Call) and _is_jax_jit(sub.func):
+                    findings.append(Finding(
+                        rule="R4", path=mod.relpath, line=sub.lineno,
+                        message=f"inline `jax.jit(...)` inside "
+                                f"`{fn.qualname}` — the compile cache is "
+                                f"rebuilt on every call unless cached by "
+                                f"hand"))
+    return findings

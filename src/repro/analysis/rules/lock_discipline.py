@@ -1,0 +1,82 @@
+"""R2 — lock discipline on ``DynamicIVFIndex`` mutable state.
+
+The index mutates under a single ``threading.RLock`` (``self._lock``); the
+query path snapshots under it and computes outside it.  This rule makes the
+convention mechanical:
+
+  * inside the class, every load/store of a guarded field (``delta_x``,
+    ``delta_assign``, ``base``, ``_fused``, ``_flat_buf``, ``appends``,
+    ``reclusters``) must sit lexically inside ``with self._lock:``
+    (``__init__`` is exempt — the object is not yet shared);
+  * everywhere else, touching a distinctively-named mutable field
+    (``delta_x``, ``delta_assign``, ``_fused``, ``_flat_buf``) on ANY
+    receiver, or ``.base`` in a function that references
+    ``DynamicIVFIndex``, requires ``with <receiver>._lock:``.
+
+Lock state does NOT flow into nested ``def``/``lambda`` bodies — a closure
+may execute on another thread after the ``with`` exits — so code inside
+them must re-acquire.  Intentional unlocked access (e.g. a snapshot taken
+by the caller under the lock) carries ``# repro: allow-unlocked: why``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..core import Finding
+
+CLASS_NAME = "DynamicIVFIndex"
+GUARDED = {"delta_x", "delta_assign", "base", "_fused", "_flat_buf",
+           "appends", "reclusters"}
+DISTINCTIVE = {"delta_x", "delta_assign", "_fused", "_flat_buf"}
+EXEMPT_METHODS = {"__init__"}
+
+
+def _lock_receivers(with_node: ast.With) -> Set[str]:
+    out = set()
+    for item in with_node.items:
+        expr = item.context_expr
+        if isinstance(expr, ast.Attribute) and expr.attr == "_lock" \
+                and isinstance(expr.value, ast.Name):
+            out.add(expr.value.id)
+    return out
+
+
+def _check(node: ast.AST, locked: Set[str], internal: bool,
+           want_base: bool, hits: List[ast.Attribute]) -> None:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        locked = set()          # closures may outlive the with block
+    if isinstance(node, ast.With):
+        locked = locked | _lock_receivers(node)
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        recv, attr = node.value.id, node.attr
+        if internal and recv == "self":
+            if attr in GUARDED and recv not in locked:
+                hits.append(node)
+        elif not internal and recv != "self":
+            if (attr in DISTINCTIVE or (want_base and attr == "base")) \
+                    and recv not in locked:
+                hits.append(node)
+    for child in ast.iter_child_nodes(node):
+        _check(child, locked, internal, want_base, hits)
+
+
+def run(project, config) -> List[Finding]:
+    findings = []
+    for fn in project.all_funcs():
+        internal = fn.cls == CLASS_NAME
+        if internal and fn.name in EXEMPT_METHODS:
+            continue
+        want_base = not internal and any(
+            isinstance(n, ast.Name) and n.id == CLASS_NAME
+            for n in ast.walk(fn.node))
+        hits: List[ast.Attribute] = []
+        for stmt in getattr(fn.node, "body", []):
+            _check(stmt, set(), internal, want_base, hits)
+        for node in hits:
+            where = "" if internal else f" of a {CLASS_NAME}"
+            findings.append(Finding(
+                rule="R2", path=fn.module.relpath, line=node.lineno,
+                message=f"`{ast.unparse(node)}`{where} accessed outside "
+                        f"`with ..._lock` in `{fn.qualname}`"))
+    return findings

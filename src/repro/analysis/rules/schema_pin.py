@@ -1,0 +1,134 @@
+"""R3 — artifact-schema drift requires a ``FORMAT_VERSION`` bump.
+
+`schema_pin.json` pins, for the CURRENT ``FORMAT_VERSION``:
+
+  * every router family's ``state_attrs`` tuple (the exact tensor set the
+    npz round-trips), and
+  * the manifest keys ``save_router`` writes.
+
+Any drift in either — an attr added/removed/renamed, a manifest field
+changed — while ``FORMAT_VERSION`` still equals the pinned version is a
+finding: old artifacts would load into a router whose state contract
+silently changed.  Bumping ``FORMAT_VERSION`` without refreshing the pin is
+also a finding, so the bump and the new pin land in the same commit:
+
+    python scripts/lint_gate.py --update-schema-pin
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from ..core import Finding
+
+ROUTERS_DIR = "repro/core/routers"
+PIN_NAME = "schema_pin.json"
+
+
+def default_pin_path() -> Path:
+    return Path(__file__).resolve().parent.parent / PIN_NAME
+
+
+def _const_strings(node: ast.AST) -> Optional[List[str]]:
+    if isinstance(node, (ast.Tuple, ast.List)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in node.elts):
+        return [e.value for e in node.elts]
+    return None
+
+
+def extract_schema(project) -> Tuple[Optional[int], Dict[str, List[str]],
+                                     List[str], Dict[str, int]]:
+    """-> (format_version, {class: state_attrs}, manifest_fields, linenos)"""
+    version = None
+    attrs: Dict[str, List[str]] = {}
+    manifest: List[str] = []
+    linenos: Dict[str, int] = {}
+    for mod in project.modules:
+        if ROUTERS_DIR not in mod.relpath:
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, ast.Assign) and any(
+                            isinstance(t, ast.Name) and
+                            t.id == "state_attrs" for t in item.targets):
+                        vals = _const_strings(item.value)
+                        if vals is not None:
+                            attrs[node.name] = vals
+                            linenos[node.name] = item.lineno
+                    elif isinstance(item, ast.AnnAssign) and isinstance(
+                            item.target, ast.Name) and \
+                            item.target.id == "state_attrs" and item.value:
+                        vals = _const_strings(item.value)
+                        if vals is not None:
+                            attrs[node.name] = vals
+                            linenos[node.name] = item.lineno
+            elif isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "FORMAT_VERSION"
+                    for t in node.targets):
+                if isinstance(node.value, ast.Constant):
+                    version = int(node.value.value)
+                    linenos["FORMAT_VERSION"] = node.lineno
+        if "artifacts" in mod.relpath:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) and \
+                        node.name == "save_router":
+                    for sub in ast.walk(node):
+                        if isinstance(sub, ast.Assign) and any(
+                                isinstance(t, ast.Name) and
+                                t.id == "manifest" for t in sub.targets) \
+                                and isinstance(sub.value, ast.Dict):
+                            manifest = [k.value for k in sub.value.keys
+                                        if isinstance(k, ast.Constant)]
+                            linenos["__manifest__"] = sub.lineno
+    return version, attrs, manifest, linenos
+
+
+def current_schema(project) -> dict:
+    version, attrs, manifest, _ = extract_schema(project)
+    return {"format_version": version,
+            "state_attrs": {k: list(v) for k, v in sorted(attrs.items())},
+            "manifest_fields": sorted(manifest)}
+
+
+def run(project, config) -> List[Finding]:
+    pin_path = Path(config.get("schema_pin") or default_pin_path())
+    version, attrs, manifest, linenos = extract_schema(project)
+    if version is None:
+        return []        # no artifacts module under this root: nothing to pin
+    art_path = next((m.relpath for m in project.modules
+                     if ROUTERS_DIR in m.relpath and
+                     m.relpath.endswith("artifacts.py")), ROUTERS_DIR)
+    if not pin_path.exists():
+        return [Finding(
+            rule="R3", path=art_path, line=linenos.get("FORMAT_VERSION", 1),
+            message=f"schema pin `{pin_path.name}` missing — generate it "
+                    f"with scripts/lint_gate.py --update-schema-pin")]
+    pin = json.loads(pin_path.read_text())
+    findings = []
+    bump = ("bump FORMAT_VERSION and refresh the pin"
+            if version == pin.get("format_version")
+            else "refresh the pin (scripts/lint_gate.py --update-schema-pin)")
+    if version != pin.get("format_version"):
+        findings.append(Finding(
+            rule="R3", path=art_path, line=linenos.get("FORMAT_VERSION", 1),
+            message=f"FORMAT_VERSION is {version} but the schema pin was "
+                    f"taken at {pin.get('format_version')} — {bump}"))
+    pinned_attrs = pin.get("state_attrs", {})
+    for cls in sorted(set(pinned_attrs) | set(attrs)):
+        got, want = attrs.get(cls), pinned_attrs.get(cls)
+        if got != want:
+            findings.append(Finding(
+                rule="R3", path=art_path, line=linenos.get(cls, 1),
+                message=f"`{cls}.state_attrs` drifted from the pinned "
+                        f"schema ({want} -> {got}) — {bump}"))
+    if sorted(manifest) != sorted(pin.get("manifest_fields", [])):
+        findings.append(Finding(
+            rule="R3", path=art_path, line=linenos.get("__manifest__", 1),
+            message=f"artifact manifest fields drifted from the pinned "
+                    f"schema — {bump}"))
+    return findings

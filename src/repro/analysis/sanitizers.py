@@ -1,0 +1,128 @@
+"""Runtime sanitizers — the dynamic counterparts of the R1/R4 lint rules,
+wired into pytest fixtures (see ``tests/conftest.py``).
+
+* `no_implicit_transfers` — `jax.transfer_guard("disallow")` scoped to a
+  steady-state serving batch.  Under it, EXPLICIT conversions
+  (`jnp.asarray`, `jax.device_put`) still pass but any implicit
+  host<->device movement — a raw python scalar or np array smuggled into a
+  jitted call, an `.item()` on a device value — raises, which is the
+  machine-checkable form of "the fused path is one device dispatch".
+
+* `RetraceCounter` — snapshots the compile-cache sizes of a set of jitted
+  callables and reports any growth, i.e. recompiles.  Waves of the same
+  (index-kind, batch-bucket) cell must not grow any cache after warmup.
+
+* `run_with_watchdog` — an interleaving harness for the online index's
+  append / recluster / query / close surface: worker threads run
+  concurrently under a deadline; on a hang the watchdog raises
+  `DeadlockError` carrying every thread's live stack instead of letting CI
+  time out silently.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import traceback
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence
+
+import jax
+
+
+@contextmanager
+def no_implicit_transfers():
+    """Fail on any implicit device<->host transfer inside the block."""
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+def _cache_size(fn) -> int:
+    sizer = getattr(fn, "_cache_size", None)
+    if sizer is None:
+        raise TypeError(f"{fn!r} does not expose a jit cache "
+                        f"(_cache_size); pass jitted callables only")
+    return sizer()
+
+
+@dataclass
+class RetraceCounter:
+    """Tracks compile counts of named jitted callables between checkpoints.
+
+        rc = RetraceCounter({"serve": _serve_fused_jit})
+        rc.snapshot()
+        ... repeated waves ...
+        assert rc.retraces() == {}        # no recompiles
+    """
+    fns: Dict[str, Callable]
+    _base: Dict[str, int] = field(default_factory=dict)
+
+    def snapshot(self) -> Dict[str, int]:
+        self._base = {name: _cache_size(fn)
+                      for name, fn in self.fns.items()}
+        return dict(self._base)
+
+    def retraces(self) -> Dict[str, int]:
+        """{name: new compiles since snapshot()} — empty means stable."""
+        out = {}
+        for name, fn in self.fns.items():
+            delta = _cache_size(fn) - self._base.get(name, 0)
+            if delta:
+                out[name] = delta
+        return out
+
+    def total(self) -> int:
+        return sum(self.retraces().values())
+
+
+class DeadlockError(AssertionError):
+    pass
+
+
+def _live_stacks() -> str:
+    frames = sys._current_frames()
+    lines = []
+    for t in threading.enumerate():
+        frame = frames.get(t.ident)
+        lines.append(f"--- {t.name} (daemon={t.daemon}) ---")
+        if frame is not None:
+            lines.extend(traceback.format_stack(frame))
+    return "".join(lines)
+
+
+def run_with_watchdog(workers: Sequence[Callable[[], None]], *,
+                      timeout: float = 60.0) -> None:
+    """Run ``workers`` concurrently; raise `DeadlockError` with a full
+    all-thread stack dump if they have not ALL finished within ``timeout``
+    seconds.  Worker exceptions are re-raised in the caller."""
+    errors: List[BaseException] = []
+    err_lock = threading.Lock()
+
+    def wrap(fn):
+        def runner():
+            try:
+                fn()
+            except BaseException as exc:     # noqa: BLE001 — re-raised below
+                with err_lock:
+                    errors.append(exc)
+        return runner
+
+    threads = [threading.Thread(target=wrap(fn), daemon=True,
+                                name=f"watchdog-worker-{i}")
+               for i, fn in enumerate(workers)]
+    for t in threads:
+        t.start()
+    deadline = threading.Event()
+    remaining = timeout
+    for t in threads:
+        import time
+        start = time.monotonic()
+        t.join(remaining)
+        remaining -= time.monotonic() - start
+        if t.is_alive():
+            raise DeadlockError(
+                f"interleaving harness hung (> {timeout:.0f}s); live "
+                f"stacks:\n{_live_stacks()}")
+    del deadline
+    if errors:
+        raise errors[0]

@@ -23,6 +23,13 @@ re-cluster replays the original build seed.
 ``state_attrs`` declaration; ``save_router`` / ``load_router`` wrap them with
 the manifest so ``load_router(save_router(r))`` reproduces
 ``predict_utility`` bitwise.
+
+The on-disk schema is machine-pinned: lint rule R3 (`repro.analysis`)
+fingerprints every family's ``state_attrs`` and the manifest field set
+against ``src/repro/analysis/schema_pin.json``.  Changing either WITHOUT
+bumping `FORMAT_VERSION` fails ``scripts/lint_gate.py`` — bump the version,
+document the change in the ledger below, and refresh the pin in the same
+commit (``scripts/lint_gate.py --update-schema-pin``).
 """
 from __future__ import annotations
 
@@ -123,14 +130,17 @@ def _collect_dynamic(val, attr, out):
     tier verbatim (bitwise reload of pending rows), counters, and the
     re-build parameters a post-load re-cluster must replay.  A background
     compaction still building is joined first — the artifact must capture
-    one consistent (base, delta) pair, not a mid-swap hybrid."""
+    one consistent (base, delta) pair, not a mid-swap hybrid.  The join
+    happens OUTSIDE the lock (the swap itself needs it; joining while
+    holding it would deadlock), then the fields are read under it."""
     val.join_recluster()
-    for f in _index_fields(val.base):
-        out[f"{attr}/base/{f}"] = np.asarray(getattr(val.base, f))
-    out[f"{attr}/delta_x"] = np.asarray(val.delta_x, np.float32)
-    out[f"{attr}/delta_assign"] = np.asarray(val.delta_assign, np.int32)
-    for meta in _DYN_META:
-        out[f"{attr}/{meta}"] = np.asarray(getattr(val, meta))
+    with val._lock:
+        for f in _index_fields(val.base):
+            out[f"{attr}/base/{f}"] = np.asarray(getattr(val.base, f))
+        out[f"{attr}/delta_x"] = np.asarray(val.delta_x, np.float32)
+        out[f"{attr}/delta_assign"] = np.asarray(val.delta_assign, np.int32)
+        for meta in _DYN_META:
+            out[f"{attr}/{meta}"] = np.asarray(getattr(val, meta))
     for bk in _DYN_BUILD_KEYS:
         v = val.build_kw.get(bk)
         out[f"{attr}/build/{bk}"] = np.asarray(-1 if v is None else int(v))
@@ -190,10 +200,11 @@ def _restore_dynamic(sub):
     dyn = DynamicIVFIndex(_restore_index(base_fields),
                           delta_cap=int(sub["delta_cap"]),
                           build_kw=build_kw)
-    dyn.delta_x = np.asarray(sub["delta_x"], np.float32)
-    dyn.delta_assign = np.asarray(sub["delta_assign"], np.int32)
-    dyn.appends = int(sub["appends"])
-    dyn.reclusters = int(sub["reclusters"])
+    with dyn._lock:     # fresh object, but the write set is the guarded one
+        dyn.delta_x = np.asarray(sub["delta_x"], np.float32)
+        dyn.delta_assign = np.asarray(sub["delta_assign"], np.int32)
+        dyn.appends = int(sub["appends"])
+        dyn.reclusters = int(sub["reclusters"])
     return dyn
 
 

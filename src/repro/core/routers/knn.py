@@ -411,6 +411,7 @@ class KNNRouter(Router):
         else:
             sims, idx = knn_topk(jnp.asarray(q), jnp.asarray(self._X), k,
                                  use_pallas=self.use_pallas)
+        # repro: allow-host: _neighbors returns numpy by API contract
         return np.asarray(sims), np.asarray(idx)
 
     # ---- utility ----
@@ -590,8 +591,12 @@ class KNNRouter(Router):
         ``index="exact"`` a non-fused cell routes the brute-force scan as
         its own dispatch ahead of the same tail.  Decisions are identical
         across cells; only the latency profile differs."""
+        # repro: allow-host: input embeddings arrive as host data
         X = np.atleast_2d(np.asarray(X, np.float32))
-        lam_j = jnp.asarray(np.asarray(lam, np.float32))
+        # explicit h2d (jnp.asarray) — passing a raw np/python lambda into
+        # the jitted call would be an implicit per-batch transfer, which the
+        # transfer-guard sanitizer rejects
+        lam_j = jnp.asarray(lam, jnp.float32)
         S, C = self._SC_dev()
         eff = self.resolve_backend(len(X))
         if self.index == "exact" and eff not in ("fused", "pallas"):
@@ -603,14 +608,16 @@ class KNNRouter(Router):
             out = _serve_tail_jit(jnp.asarray(sims), jnp.asarray(idx), S, C,
                                   lam_j, weights=self.weights,
                                   temperature=float(self.temperature))
+            # repro: allow-host: the single end-of-batch materialization
             return tuple(np.asarray(o) for o in out)
-        q = jnp.asarray(normalize_rows(np.asarray(X, np.float32)))
+        q = jnp.asarray(normalize_rows(X))
         if qmesh is None:
             out = _serve_fused_jit(q, lam_j, S, C, *args, search=search,
                                    weights=self.weights,
                                    temperature=float(self.temperature))
         else:
             out = self._serve_sharded(qmesh, q, lam_j, S, C, search, args)
+        # repro: allow-host: the single end-of-batch materialization
         return tuple(np.asarray(o) for o in out)
 
     def _serve_sharded(self, qmesh, q, lam, S, C, search, args):
@@ -635,6 +642,7 @@ class KNNRouter(Router):
                                        temperature=float(self.temperature))
 
             specs = (P(axes), P(axes)) + tuple(P() for _ in args) + (P(), P())
+            # repro: allow-jit-cache: cached in self._dev under `key` above
             cached = jax.jit(shmap.shard_map(
                 local, mesh=qmesh, in_specs=specs,
                 out_specs=tuple(P(axes) for _ in range(5)),

@@ -81,6 +81,7 @@ def train(params, loss_fn: Callable, data: Dict[str, np.ndarray], *,
     data_j = {k: jnp.asarray(v) for k, v in data.items()}
 
     @jax.jit
+    # repro: allow-jit-cache: fit-time trainer, scoped to one train() call
     def step(params, state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         params, state, _ = opt_mod.update(opt_cfg, grads, state, params)

@@ -136,7 +136,9 @@ def sharded_ivf_topk(queries, index: IVFIndex, k: int, mesh: Mesh,
     merges the host-resident delta tier outside the shard_map (append-local
     / re-cluster-replicated — see the module docstring)."""
     if isinstance(index, DynamicIVFIndex):
-        sc, ix = sharded_ivf_topk(queries, index.base, k, mesh, nprobe=nprobe)
+        with index._lock:       # base swaps atomically under the lock
+            base = index.base
+        sc, ix = sharded_ivf_topk(queries, base, k, mesh, nprobe=nprobe)
         return index.merge_delta(queries, sc, ix, k)
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
@@ -206,7 +208,9 @@ def sharded_ivfpq_topk(queries, index: IVFPQIndex, k: int, mesh: Mesh,
     base and merges the host-resident delta tier outside the shard_map
     (append-local / re-cluster-replicated — see the module docstring)."""
     if isinstance(index, DynamicIVFIndex):
-        sc, ix = sharded_ivfpq_topk(queries, index.base, k, mesh,
+        with index._lock:       # base swaps atomically under the lock
+            base = index.base
+        sc, ix = sharded_ivfpq_topk(queries, base, k, mesh,
                                     nprobe=nprobe, rerank=rerank)
         return index.merge_delta(queries, sc, ix, k)
     axes = tuple(mesh.axis_names)

@@ -482,35 +482,45 @@ class DynamicIVFIndex:
         self._fused = None     # cached probed-delta arrays (fused backend)
 
     # ---- delegated shape/meta ----
+    # Even single-reference reads take the (reentrant) lock: a background
+    # re-cluster swaps `base` and clears the delta together, and e.g.
+    # `n_rows` must never pair an old base with a new delta.
     @property
     def is_pq(self) -> bool:
-        return isinstance(self.base, IVFPQIndex)
+        with self._lock:
+            return isinstance(self.base, IVFPQIndex)
 
     @property
     def dim(self) -> int:
-        return int(self.base.centroids.shape[1])
+        with self._lock:
+            return int(self.base.centroids.shape[1])
 
     @property
     def delta_rows(self) -> int:
-        return len(self.delta_x)
+        with self._lock:
+            return len(self.delta_x)
 
     @property
     def n_rows(self) -> int:
-        return self.base.n_rows + len(self.delta_x)
+        with self._lock:
+            return self.base.n_rows + len(self.delta_x)
 
     @property
     def n_clusters(self) -> int:
-        return self.base.n_clusters
+        with self._lock:
+            return self.base.n_clusters
 
     @property
     def list_size(self) -> int:
-        return self.base.list_size
+        with self._lock:
+            return self.base.list_size
 
     @property
     def index_bytes(self) -> int:
         """Hot storage: the base index plus the exact-scanned delta tier."""
-        return int(self.base.index_bytes + self.delta_x.nbytes
-                   + self.delta_assign.nbytes)
+        with self._lock:
+            return int(self.base.index_bytes + self.delta_x.nbytes
+                       + self.delta_assign.nbytes)
 
     # ---- streaming append ----
     def append(self, rows) -> np.ndarray:
@@ -538,12 +548,14 @@ class DynamicIVFIndex:
         per-row assignments exist for: a tier concentrated in few lists
         means incoming traffic has moved and the next re-cluster will
         re-partition substantially."""
-        return np.bincount(self.delta_assign, minlength=self.n_clusters)
+        with self._lock:
+            return np.bincount(self.delta_assign, minlength=self.n_clusters)
 
     # ---- compaction ----
     @property
     def needs_recluster(self) -> bool:
-        return len(self.delta_x) > self.delta_cap
+        with self._lock:
+            return len(self.delta_x) > self.delta_cap
 
     @property
     def recluster_pending(self) -> bool:
@@ -553,12 +565,17 @@ class DynamicIVFIndex:
 
     def join_recluster(self) -> None:
         """Wait for a pending background compaction to swap in (no-op when
-        none is running) — the synchronization point tests and artifact
-        serialization use."""
+        none is running) — the synchronization point tests, `close()`, and
+        artifact serialization use.  Safe to call concurrently: each caller
+        joins the thread it observed, and only the caller that still sees
+        that same thread clears the slot (a plain ``= None`` would clobber
+        a newer compaction started by another thread in between)."""
         t = self._rc_thread
         if t is not None:
             t.join()
-            self._rc_thread = None
+            with self._lock:
+                if self._rc_thread is t:
+                    self._rc_thread = None
 
     def maybe_recluster(self, sync: bool = True) -> bool:
         """Compact iff the delta tier exceeds ``delta_cap``.  Returns whether
@@ -574,19 +591,24 @@ class DynamicIVFIndex:
 
     def all_rows(self) -> np.ndarray:
         """Every row the index serves, global-id order (base then delta)."""
-        if not len(self.delta_x):
-            return self.base.rows()
-        return np.concatenate([self.base.rows(), self.delta_x])
+        with self._lock:
+            if not len(self.delta_x):
+                return self.base.rows()
+            return np.concatenate([self.base.rows(), self.delta_x])
 
     def _build_base(self, rows):
         """From-scratch build over ``rows`` with the ORIGINAL parameters —
-        the replay that makes a compaction bitwise-equal to a fresh build."""
+        the replay that makes a compaction bitwise-equal to a fresh build.
+        Runs OUTSIDE the lock (it is the slow k-means path), so it snapshots
+        the base reference once instead of re-reading ``self.base``."""
+        with self._lock:
+            base = self.base
         kw = self.build_kw
-        if self.is_pq:
+        if isinstance(base, IVFPQIndex):
             return build_ivfpq_index(
                 rows, n_clusters=kw.get("n_clusters"),
-                m=kw.get("m", self.base.m),      # keep the base's geometry
-                nbits=kw.get("nbits", self.base.nbits),
+                m=kw.get("m", base.m),           # keep the base's geometry
+                nbits=kw.get("nbits", base.nbits),
                 seed=kw.get("seed", 0), lane_pad=kw.get("lane_pad", _LANE_PAD))
         return build_ivf_index(
             rows, n_clusters=kw.get("n_clusters"), seed=kw.get("seed", 0),
@@ -608,12 +630,16 @@ class DynamicIVFIndex:
         centroids at swap time).  ``sync=True`` — the default, and the
         escape hatch determinism tests rely on — blocks until the swap."""
         if not sync:
-            if self.recluster_pending:
-                return
-            t = threading.Thread(target=self._recluster_job, daemon=True,
-                                 name="repro-ivf-recluster")
-            self._rc_thread = t
-            t.start()
+            # start-then-publish, all under the lock: a concurrent
+            # join_recluster must never observe an unstarted thread, and
+            # two sync=False callers must not both spawn a job
+            with self._lock:
+                if self.recluster_pending:
+                    return
+                t = threading.Thread(target=self._recluster_job, daemon=True,
+                                     name="repro-ivf-recluster")
+                t.start()
+                self._rc_thread = t
             return
         self.join_recluster()
         self._recluster_job()
@@ -703,22 +729,23 @@ class DynamicIVFIndex:
         buffers are retained across appends — only the freshly appended
         delta rows are copied in per rebuild, so a feedback batch costs
         O(delta) host work, not a full 4*N*D copy."""
-        cap = _pow2_pad(nd)
-        buf = getattr(self, "_flat_buf", None)
-        if (buf is None or buf["base"] is not base or buf["cap"] != cap):
-            sup_all = np.zeros((base.n_rows + cap, d), np.float32)
-            sup_all[:base.n_rows] = base.sup_flat_h
-            inv_all = np.zeros(base.n_rows + cap, np.float32)
-            inv_all[:base.n_rows][
-                base.ids_h[base.ids_h >= 0]] = base.inv_h[base.ids_h >= 0]
-            buf = {"base": base, "cap": cap, "sup": sup_all, "inv": inv_all,
-                   "nd": 0}
-            self._flat_buf = buf
-        lo = min(buf["nd"], nd)          # appends only grow the tier
-        buf["sup"][base.n_rows + lo:base.n_rows + nd] = self.delta_x[lo:]
-        buf["inv"][base.n_rows + lo:base.n_rows + nd] = inv_d[lo:]
-        buf["nd"] = nd
-        return buf["sup"], buf["inv"]
+        with self._lock:
+            cap = _pow2_pad(nd)
+            buf = getattr(self, "_flat_buf", None)
+            if (buf is None or buf["base"] is not base or buf["cap"] != cap):
+                sup_all = np.zeros((base.n_rows + cap, d), np.float32)
+                sup_all[:base.n_rows] = base.sup_flat_h
+                inv_all = np.zeros(base.n_rows + cap, np.float32)
+                inv_all[:base.n_rows][
+                    base.ids_h[base.ids_h >= 0]] = base.inv_h[base.ids_h >= 0]
+                buf = {"base": base, "cap": cap, "sup": sup_all,
+                       "inv": inv_all, "nd": 0}
+                self._flat_buf = buf
+            lo = min(buf["nd"], nd)      # appends only grow the tier
+            buf["sup"][base.n_rows + lo:base.n_rows + nd] = self.delta_x[lo:]
+            buf["inv"][base.n_rows + lo:base.n_rows + nd] = inv_d[lo:]
+            buf["nd"] = nd
+            return buf["sup"], buf["inv"]
 
     # ---- delta-tier scan + merge ----
     def delta_topk(self, queries, k: int):
@@ -727,15 +754,19 @@ class DynamicIVFIndex:
         the tier is delta_cap-bounded, so the scan is O(Q * delta_cap * D)).
         Output contract matches `ivf_topk`: -inf / -1 beyond the valid
         candidates; ids are global (offset by the base row count)."""
+        # repro: allow-host: delta tier is a host exact scan by design
         q = np.asarray(queries, np.float32)
-        qn, nd = len(q), len(self.delta_x)
+        with self._lock:        # coherent (delta, base-row-offset) snapshot
+            delta = self.delta_x
+            base_rows = self.base.n_rows
+        qn, nd = len(q), len(delta)
         kk = min(k, nd)
         sc = np.full((qn, k), -np.inf, np.float32)
         ix = np.full((qn, k), -1, np.int32)
         if kk == 0:
             return sc, ix
-        inv = 1.0 / np.maximum(np.linalg.norm(self.delta_x, axis=1), 1e-12)
-        sims = (q @ self.delta_x.T) * inv
+        inv = 1.0 / np.maximum(np.linalg.norm(delta, axis=1), 1e-12)
+        sims = (q @ delta.T) * inv
         if kk < nd:
             part = np.argpartition(-sims, kk - 1, axis=1)[:, :kk]
         else:
@@ -744,7 +775,7 @@ class DynamicIVFIndex:
         order = np.argsort(-psims, axis=1, kind="stable")
         top = np.take_along_axis(part, order, axis=1)
         sc[:, :kk] = np.take_along_axis(sims, top, axis=1)
-        ix[:, :kk] = (self.base.n_rows + top).astype(np.int32)
+        ix[:, :kk] = (base_rows + top).astype(np.int32)
         return sc, ix
 
     def merge_delta(self, queries, base_sc, base_ix, k: int):
@@ -754,10 +785,14 @@ class DynamicIVFIndex:
         EMPTY tier — the steady state between feedback batches — the base
         result passes through untouched (no device->host round trip on the
         serving hot path)."""
-        if not len(self.delta_x):
-            return base_sc, base_ix
-        k = min(k, self.n_rows)
+        with self._lock:
+            n_rows = self.base.n_rows + len(self.delta_x)
+            if not len(self.delta_x):
+                return base_sc, base_ix
+        k = min(k, n_rows)
+        # repro: allow-host: staged-backend merge materializes once per batch
         bs = np.asarray(base_sc, np.float32)
+        # repro: allow-host: staged-backend merge materializes once per batch
         bi = np.asarray(base_ix, np.int32)
         if bs.shape[1] < k:       # base clamped below k: pad to merge width
             padw = k - bs.shape[1]
@@ -1303,15 +1338,19 @@ def ivf_topk(queries, index: IVFIndex, k: int,
     if backend == "fused":
         return _fused_ivf_dispatch(jnp.asarray(queries), index, k, nprobe)
     if isinstance(index, DynamicIVFIndex):
+        with index._lock:       # base swaps atomically under the lock
+            base = index.base
         base_sc, base_ix = ivf_topk(
-            queries, index.base, k, nprobe, use_pallas=use_pallas,
+            queries, base, k, nprobe, use_pallas=use_pallas,
             backend=backend, interpret=interpret, block_q=block_q)
         return index.merge_delta(queries, base_sc, base_ix, k)
     k = min(k, index.n_rows, nprobe * index.list_size)
     queries = jnp.asarray(queries)
+    # repro: allow-host: staged backends plan tile probes on the host
     q_probe = np.asarray(ivf_probe(queries, index.centroids, nprobe))
 
     if backend == "host":
+        # repro: allow-host: the CPU inverted-traversal backend by contract
         return _score_pairs_host(np.asarray(queries, np.float32), q_probe,
                                  index, k)
 
@@ -1372,16 +1411,20 @@ def ivfpq_topk(queries, index: IVFPQIndex, k: int,
         return _fused_ivfpq_dispatch(jnp.asarray(queries), index, k, rerank,
                                      nprobe)
     if isinstance(index, DynamicIVFIndex):
+        with index._lock:       # base swaps atomically under the lock
+            base = index.base
         base_sc, base_ix = ivfpq_topk(
-            queries, index.base, k, nprobe, rerank, use_pallas=use_pallas,
+            queries, base, k, nprobe, rerank, use_pallas=use_pallas,
             backend=backend, interpret=interpret, block_q=block_q)
         return index.merge_delta(queries, base_sc, base_ix, k)
     k = min(k, index.n_rows, nprobe * index.list_size)
     kk = min(max(rerank, 1) * k, index.n_rows, nprobe * index.list_size)
     queries = jnp.asarray(queries)
+    # repro: allow-host: staged backends plan tile probes on the host
     q_probe = np.asarray(ivf_probe(queries, index.centroids, nprobe))
 
     if backend == "host":
+        # repro: allow-host: the CPU ADC traversal backend by contract
         scores, idx = _adc_pairs_host(np.asarray(queries, np.float32),
                                       q_probe, index, kk)
         if not rerank:

@@ -114,6 +114,8 @@ def pack_codes(codes: np.ndarray, nbits: int) -> np.ndarray:
     """``(N, m)`` codes -> packed ``(N, m*nbits/8)`` uint8.  nbits=8 is the
     identity; nbits=4 packs code pairs as ``lo | hi<<4`` (m must be even)."""
     if nbits == 8:
+        # serving hits this only via fused_state's cached delta assembly
+        # repro: allow-host: encode-time packing, amortized across queries
         return np.ascontiguousarray(codes, np.uint8)
     if nbits == 4:
         assert codes.shape[-1] % 2 == 0, codes.shape

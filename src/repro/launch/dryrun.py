@@ -39,6 +39,7 @@ def compile_bundle(cfg, shape, mesh, rules=None):
     bundle = steps_mod.build(cfg, shape, mesh)
     with mesh:
         with sharding_context(mesh, rules):
+            # repro: allow-jit-cache: offline dry-run entry point, one call
             jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                              out_shardings=bundle.out_shardings)
             lowered = jitted.lower(*bundle.args)

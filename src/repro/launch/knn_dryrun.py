@@ -34,6 +34,7 @@ def lower_variant(mesh, n, q, d, k, dtype, k_local):
     from jax.sharding import NamedSharding, PartitionSpec as P
     axes = tuple(mesh.axis_names)
     with mesh:
+        # repro: allow-jit-cache: offline dry-run entry point, one call
         compiled = jax.jit(
             fn,
             in_shardings=(NamedSharding(mesh, P()),

@@ -47,6 +47,7 @@ def main(argv=None):
     opt_cfg = O.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                           total_steps=args.steps)
     opt_state = O.init(params)
+    # repro: allow-jit-cache: training entry point; jitted once per run
     step_fn = jax.jit(make_train_step(cfg, opt_cfg))
 
     stream = SyntheticLMStream(DataConfig(

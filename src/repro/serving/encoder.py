@@ -38,6 +38,7 @@ def _encoder():
     params = M.init_params(jax.random.PRNGKey(7), cfg)
 
     @jax.jit
+    # repro: allow-jit-cache: _encoder is lru_cached, one cache per process
     def run(tokens):
         x = params["embed"][tokens]
         pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])

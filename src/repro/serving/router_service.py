@@ -164,8 +164,13 @@ class RouterService:
         """Join any in-flight background index compaction (daemon-thread
         re-cluster kicked off by `observe`).  Without this, process teardown
         or an artifact save can race the atomic index swap; after it, the
-        router holds one consistent (base, delta) pair.  Idempotent — safe
-        to call on routers with no streaming tier."""
+        router holds one consistent (base, delta) pair.  Idempotent, and
+        safe to call concurrently with an in-flight compaction (or with
+        other `close()` callers): every caller joins the compaction thread
+        it observed, and `join_recluster` clears the thread slot with a
+        compare-and-set so it never clobbers a newer compaction.  The
+        service remains usable after `close()` — it is a synchronization
+        point, not a teardown."""
         jr = getattr(self.router, "join_recluster", None)
         if callable(jr):
             jr()
@@ -181,6 +186,7 @@ class RouterService:
         """None -> service default; scalar -> broadcast; (n,) vector as-is."""
         if lam is None:
             lam = self.default_lam
+        # repro: allow-host: lambdas arrive as host request metadata
         arr = np.asarray(lam, np.float32)
         if arr.ndim == 0:
             return np.full((n,), float(arr), np.float32)
@@ -203,6 +209,7 @@ class RouterService:
         lam_r = self._resolve_lam(lam, n)
         choice, _ = _route_batch(jnp.asarray(s_hat), jnp.asarray(c_hat),
                                  jnp.asarray(lam_r))
+        # repro: allow-host: the legacy chain's end-of-batch materialization
         return np.asarray(choice), lam_r
 
     def _decide(self, emb: np.ndarray, lam) -> tuple:
@@ -222,13 +229,15 @@ class RouterService:
         Returns (choice, s_hat, c_hat, confidence-or-None, lam_r) as numpy.
         ``qmesh`` shards the batch axis across a device mesh (replicated
         index; bitwise-identical results)."""
+        # repro: allow-host: input embeddings arrive as host data
         emb = np.atleast_2d(np.asarray(emb, np.float32))
         lam_r = self._resolve_lam(lam, len(emb))
         sf = getattr(self.router, "serve_fused", None)
         if callable(sf):
+            # serve_fused already returns numpy — no further conversion
             choice, s_hat, c_hat, _, agree = sf(emb, lam_r, qmesh=qmesh)
             self._check_arity(s_hat)
-            return np.asarray(choice), s_hat, c_hat, agree, lam_r
+            return choice, s_hat, c_hat, agree, lam_r
         s_hat, c_hat, conf = self._predict_for_serving(emb)
         choice, lam_r = self._choose(s_hat, c_hat, lam_r, len(emb))
         return choice, s_hat, c_hat, conf, lam_r

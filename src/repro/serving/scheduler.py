@@ -80,6 +80,7 @@ class MicroBatcher:
             collections.deque()
         self._results: Dict[int, object] = {}
         self._next_ticket = 0
+        self._closed = False
         self.flushes = 0          # dispatches actually issued
         self.routed = 0           # requests routed through them
 
@@ -106,6 +107,8 @@ class MicroBatcher:
     def submit(self, text: str, lam: Optional[float] = None) -> int:
         """Queue a request; returns its ticket (stable across flushes —
         claim the result later with ``pop_result(ticket)``)."""
+        if self._closed:
+            raise RuntimeError("MicroBatcher is closed; no new submissions")
         ticket = self._next_ticket
         self._next_ticket += 1
         self._queue.append((ticket, text, lam, self.clock()))
@@ -152,6 +155,17 @@ class MicroBatcher:
         """Claim (and forget) the `RoutedResult` of a flushed ticket, or
         None while its wave is still pending."""
         return self._results.pop(ticket, None)
+
+    def close(self) -> None:
+        """Drain: flush every still-pending wave so ALL outstanding tickets
+        resolve, then refuse new submissions.  Idempotent.  Unclaimed
+        results stay claimable through ``pop_result`` after close — a
+        ticket holder must never lose its answer to a shutdown race."""
+        if self._closed:
+            return
+        while self._queue:
+            self.flush()
+        self._closed = True
 
 
 class WaveScheduler:

@@ -1,6 +1,42 @@
 import os
 import sys
 
+import pytest
+
 # tests must see ONE device (the dry-run sets its own flag in-process);
 # keep any user XLA_FLAGS but never force a device count here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ---- runtime sanitizers (repro.analysis.sanitizers) ----
+
+@pytest.fixture
+def no_implicit_transfers():
+    """Context manager fixture: fail the test on any IMPLICIT device<->host
+    transfer inside the block (explicit jnp.asarray / device_put still
+    pass).  Wrap the steady-state portion of a serving path with it."""
+    from repro.analysis.sanitizers import no_implicit_transfers as guard
+    return guard
+
+
+@pytest.fixture
+def retrace_counter():
+    """Factory fixture: ``rc = retrace_counter({"serve": jitted_fn})`` ->
+    a RetraceCounter; snapshot() after warmup, retraces() must stay empty
+    across repeated waves of the same shape bucket."""
+    from repro.analysis.sanitizers import RetraceCounter
+
+    def make(fns):
+        rc = RetraceCounter(fns)
+        rc.snapshot()
+        return rc
+    return make
+
+
+@pytest.fixture
+def watchdog():
+    """Deadlock-watchdog harness: ``watchdog([fn, fn, ...], timeout=30)``
+    runs the thunks on concurrent threads and raises DeadlockError with an
+    all-thread stack dump if they don't all finish in time."""
+    from repro.analysis.sanitizers import run_with_watchdog
+    return run_with_watchdog

@@ -11,7 +11,7 @@ from repro.core.routers import (DispatchPolicy, KNNRouter,
                                 save_router)
 from repro.core.routers.dispatch import EXEC_BACKEND, POLICY_BACKENDS
 from repro.serving.router_service import RouterService
-from repro.serving.scheduler import MicroBatcher
+from repro.serving.scheduler import MicroBatcher, WaveScheduler
 
 D = 24
 MODELS = ["m-a", "m-b", "m-c"]
@@ -270,7 +270,58 @@ def test_microbatcher_from_policy(policy):
     assert mb2.ready() is True              # no timeout = old always-flush
 
 
+# ---- batcher/scheduler timeout & shutdown edges ----
+
+def test_empty_wave_tick_is_a_noop_dispatch():
+    """A tick with nothing pending must not issue a routing dispatch."""
+    sched = WaveScheduler({}, batcher=MicroBatcher(_StubService()))
+    for _ in range(3):
+        sched.tick()
+    assert sched.stats.waves == 3
+    assert sched.batcher.flushes == 0 and sched.batcher.routed == 0
+    assert sched.pending() == 0
+
+
+def test_flush_with_zero_pending_tickets():
+    mb = MicroBatcher(_StubService())
+    assert mb.flush() == []
+    assert mb.maybe_flush() == []
+    assert mb.flushes == 0                  # no dispatch was issued
+
+
+def test_close_drains_and_pop_result_survives_close():
+    mb = MicroBatcher(_StubService(), max_batch=2)
+    tickets = [mb.submit(f"q{i}") for i in range(5)]
+    mb.close()                              # drains ALL waves, not just one
+    assert mb.pending() == 0 and mb.flushes == 3
+    mb.close()                              # idempotent
+    assert mb.flushes == 3
+    for i, t in enumerate(tickets):         # results survive the close
+        assert mb.pop_result(t)["text"] == f"q{i}"
+    assert mb.pop_result(tickets[0]) is None
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit("late")
+
+
 # ---- recluster lifecycle ----
+
+def test_close_races_inflight_recluster(ds, watchdog):
+    """`RouterService.close()` is idempotent and safe called concurrently
+    while a background compaction daemon is mid-rebuild: every closer
+    returns, the thread slot is cleared exactly once, and the compaction's
+    swap still lands."""
+    r = KNNRouter(k=5, index="ivf", online=True, delta_cap=10).fit(ds)
+    svc = RouterService(r, {m: None for m in MODELS}, lam=0.5)
+    rng = np.random.default_rng(13)
+    for _ in range(4):
+        svc.observe(rng.normal(size=(12, D)).astype(np.float32),
+                    rng.uniform(0, 1, (12, 3)).astype(np.float32),
+                    recluster="background")
+        watchdog([svc.close] * 4, timeout=60.0)  # racing closers
+        assert r._ivf._rc_thread is None
+        assert r._ivf.delta_rows == 0
+    svc.close()                             # still a no-op afterwards
+
 
 def test_service_close_joins_background_recluster(ds):
     r = KNNRouter(k=5, index="ivf", online=True, delta_cap=10).fit(ds)

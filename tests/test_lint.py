@@ -1,0 +1,356 @@
+"""The repro.analysis lint engine: each rule catches a seeded violation
+with a file:line report, pragmas/baselines suppress with a justification,
+and the shipped src/ tree is clean with ZERO suppressed findings."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.core import write_baseline
+from repro.analysis.lint import lint_paths
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+GATE = REPO / "scripts" / "lint_gate.py"
+
+
+def put(root: Path, rel: str, code: str) -> Path:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    return path
+
+
+def lint(root, **kw):
+    active, suppressed = lint_paths(Path(root), **kw)
+    return active, suppressed
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree
+# ---------------------------------------------------------------------------
+
+def test_src_tree_clean_with_empty_baseline():
+    """The acceptance bar: zero findings over src/ and zero baselined —
+    every intentional host/lock/jit exception is a justified pragma."""
+    active, suppressed = lint(
+        SRC, config={"baseline": str(SRC / "repro/analysis/"
+                                     "lint_baseline.txt")})
+    assert [f.render() for f in active] == []
+    assert suppressed == []
+
+
+# ---------------------------------------------------------------------------
+# R1 host sync
+# ---------------------------------------------------------------------------
+
+def test_r1_flags_host_sync_in_root(tmp_path):
+    put(tmp_path, "mod.py", """
+        import numpy as np
+
+        def route_fused(emb):
+            return np.asarray(emb)
+    """)
+    active, _ = lint(tmp_path, rules=["R1"])
+    assert len(active) == 1
+    f = active[0]
+    assert f.rule == "R1" and f.path == "mod.py" and f.line == 5
+    assert "np.asarray" in f.message
+
+
+def test_r1_walks_the_call_graph(tmp_path):
+    put(tmp_path, "mod.py", """
+        def _helper(x):
+            return x.item()
+
+        def serve_fused(x):
+            return _helper(x)
+
+        def unrelated(x):
+            import numpy as np
+            return np.asarray(x)      # NOT reachable from a serving root
+    """)
+    active, _ = lint(tmp_path, rules=["R1"])
+    assert [(f.line, f.rule) for f in active] == [(3, "R1")]
+    assert ".item()" in active[0].message
+
+
+def test_r1_pragma_needs_justification(tmp_path):
+    put(tmp_path, "mod.py", """
+        import numpy as np
+
+        def route_fused(emb):
+            ok = np.asarray(emb)      # repro: allow-host: input coercion
+            bad = np.asarray(emb)     # repro: allow-host
+            return ok, bad
+    """)
+    active, _ = lint(tmp_path, rules=["R1"])
+    # the justified pragma suppresses; the bare one suppresses NOTHING and
+    # is itself reported
+    assert sorted((f.rule, f.line) for f in active) == [
+        ("PRAGMA", 6), ("R1", 6)]
+
+
+def test_r1_standalone_pragma_covers_next_line(tmp_path):
+    put(tmp_path, "mod.py", """
+        import numpy as np
+
+        def _fused_dispatch(x):
+            # repro: allow-host: end-of-batch materialization
+            return np.asarray(x)
+    """)
+    active, _ = lint(tmp_path, rules=["R1"])
+    assert active == []
+
+
+# ---------------------------------------------------------------------------
+# R2 lock discipline
+# ---------------------------------------------------------------------------
+
+def test_r2_flags_unlocked_field_access(tmp_path):
+    put(tmp_path, "mod.py", """
+        import threading
+
+        class DynamicIVFIndex:
+            def __init__(self):
+                self._lock = threading.RLock()
+                self.delta_x = []          # exempt: not yet shared
+
+            def good(self):
+                with self._lock:
+                    return len(self.delta_x)
+
+            def bad(self):
+                return len(self.delta_x)
+    """)
+    active, _ = lint(tmp_path, rules=["R2"])
+    assert [(f.line, f.rule) for f in active] == [(14, "R2")]
+    assert "delta_x" in active[0].message
+
+
+def test_r2_lock_does_not_leak_into_closures(tmp_path):
+    put(tmp_path, "mod.py", """
+        class DynamicIVFIndex:
+            def spawn(self):
+                with self._lock:
+                    def job():
+                        return self.delta_x    # runs on another thread
+                    return job
+    """)
+    active, _ = lint(tmp_path, rules=["R2"])
+    assert len(active) == 1 and active[0].line == 6
+
+
+def test_r2_external_access_needs_receiver_lock(tmp_path):
+    put(tmp_path, "mod.py", """
+        from ops import DynamicIVFIndex
+
+        def good(index):
+            if isinstance(index, DynamicIVFIndex):
+                with index._lock:
+                    return index.base
+            return index
+
+        def bad(index):
+            if isinstance(index, DynamicIVFIndex):
+                return index.base
+            return index
+
+        def bad_distinctive(obj):
+            return obj.delta_assign        # distinctive field, any receiver
+    """)
+    active, _ = lint(tmp_path, rules=["R2"])
+    assert sorted(f.line for f in active) == [12, 16]
+
+
+# ---------------------------------------------------------------------------
+# R3 schema pin
+# ---------------------------------------------------------------------------
+
+ARTIFACTS = """
+    FORMAT_VERSION = {ver}
+
+    class FooRouter:
+        state_attrs = ({attrs})
+
+    def save_router(router, path):
+        manifest = {{"format_version": FORMAT_VERSION, "family": "foo"}}
+        return manifest
+"""
+
+
+def _pin(tmp_path, ver, attrs):
+    pin = tmp_path / "pin.json"
+    pin.write_text(json.dumps({
+        "format_version": ver,
+        "state_attrs": {"FooRouter": attrs},
+        "manifest_fields": ["family", "format_version"]}))
+    return pin
+
+
+def test_r3_clean_when_schema_matches_pin(tmp_path):
+    put(tmp_path, "repro/core/routers/artifacts.py",
+        ARTIFACTS.format(ver=3, attrs='"_X", "_sel_lam"'))
+    pin = _pin(tmp_path, 3, ["_X", "_sel_lam"])
+    active, _ = lint(tmp_path, rules=["R3"],
+                     config={"schema_pin": str(pin)})
+    assert active == []
+
+
+def test_r3_flags_state_attrs_drift_without_bump(tmp_path):
+    put(tmp_path, "repro/core/routers/artifacts.py",
+        ARTIFACTS.format(ver=3, attrs='"_X", "_sel_lam", "_NEW"'))
+    pin = _pin(tmp_path, 3, ["_X", "_sel_lam"])
+    active, _ = lint(tmp_path, rules=["R3"],
+                     config={"schema_pin": str(pin)})
+    assert len(active) == 1
+    assert "bump FORMAT_VERSION" in active[0].message
+    assert "FooRouter" in active[0].message
+
+
+def test_r3_flags_stale_pin_after_bump(tmp_path):
+    """Bumping the version does not silence R3 until the pin is refreshed —
+    the bump and the new pin must land together."""
+    put(tmp_path, "repro/core/routers/artifacts.py",
+        ARTIFACTS.format(ver=4, attrs='"_X", "_sel_lam", "_NEW"'))
+    pin = _pin(tmp_path, 3, ["_X", "_sel_lam"])
+    active, _ = lint(tmp_path, rules=["R3"],
+                     config={"schema_pin": str(pin)})
+    assert active and all("refresh the pin" in f.message for f in active)
+
+
+def test_r3_flags_manifest_drift(tmp_path):
+    put(tmp_path, "repro/core/routers/artifacts.py",
+        ARTIFACTS.format(ver=3, attrs='"_X", "_sel_lam"').replace(
+            '"family": "foo"', '"family": "foo", "extra": 1'))
+    pin = _pin(tmp_path, 3, ["_X", "_sel_lam"])
+    active, _ = lint(tmp_path, rules=["R3"],
+                     config={"schema_pin": str(pin)})
+    assert len(active) == 1 and "manifest fields" in active[0].message
+
+
+def test_r3_shipped_pin_matches_source():
+    """The checked-in schema_pin.json equals what the source declares."""
+    from repro.analysis.lint import build_project
+    from repro.analysis.rules.schema_pin import (current_schema,
+                                                 default_pin_path)
+    project = build_project(SRC)
+    assert current_schema(project) == json.loads(
+        default_pin_path().read_text())
+
+
+# ---------------------------------------------------------------------------
+# R4 jit-cache hygiene
+# ---------------------------------------------------------------------------
+
+def test_r4_undeclared_static_arg(tmp_path):
+    put(tmp_path, "mod.py", """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def good(x, k: int):
+            return x[:k]
+
+        @jax.jit
+        def bad(x, k: int):
+            return x[:k]
+    """)
+    active, _ = lint(tmp_path, rules=["R4"])
+    assert len(active) == 1 and active[0].line == 10
+    assert "static_argnames" in active[0].message
+
+
+def test_r4_self_closure_and_inline_jit(tmp_path):
+    put(tmp_path, "mod.py", """
+        import jax
+
+        class Server:
+            def __init__(self):
+                self.fn = jax.jit(lambda x: x)     # once per object: fine
+
+            def rebuild(self):
+                return jax.jit(lambda x: x + 1)    # fresh cache per call
+
+            @jax.jit
+            def scores(self, x):
+                return x * self.scale              # mutable closure
+    """)
+    active, _ = lint(tmp_path, rules=["R4"])
+    msgs = {f.line: f.message for f in active}
+    assert set(msgs) == {9, 13}
+    assert "rebuilt on every call" in msgs[9]
+    assert "self.scale" in msgs[13]
+
+
+def test_r4_nested_jitted_def(tmp_path):
+    put(tmp_path, "mod.py", """
+        import jax
+
+        def train(loss_fn):
+            @jax.jit
+            def step(p):
+                return loss_fn(p)
+            return step
+    """)
+    active, _ = lint(tmp_path, rules=["R4"])
+    assert len(active) == 1 and "fresh jit cache" in active[0].message
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics + the CLI gate
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppresses_known_findings(tmp_path):
+    put(tmp_path, "mod.py", """
+        import numpy as np
+
+        def route_fused(emb):
+            return np.asarray(emb)
+    """)
+    base = tmp_path / "baseline.txt"
+    active, _ = lint(tmp_path, rules=["R1"])
+    assert len(active) == 1
+    write_baseline(base, active)
+    active2, suppressed2 = lint(tmp_path, rules=["R1"],
+                                config={"baseline": str(base)})
+    assert active2 == [] and len(suppressed2) == 1
+
+
+def _run_gate(*args):
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    return subprocess.run(
+        [sys.executable, str(GATE), "--no-ruff", *args],
+        capture_output=True, text=True, env=env)
+
+
+def test_gate_cli_fails_on_seeded_violation(tmp_path):
+    put(tmp_path, "scratch.py", """
+        import numpy as np
+
+        def serve_fused(x):
+            return np.asarray(x)
+    """)
+    proc = _run_gate("--root", str(tmp_path))
+    assert proc.returncode == 1
+    assert "scratch.py:5: R1:" in proc.stdout
+
+
+def test_gate_cli_passes_on_clean_tree(tmp_path):
+    put(tmp_path, "scratch.py", """
+        def serve_fused(x):
+            return x
+    """)
+    proc = _run_gate("--root", str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.slow
+def test_gate_cli_over_real_src():
+    proc = _run_gate()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout

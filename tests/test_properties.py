@@ -5,9 +5,18 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import eval as E
+
+# Pin a named profile so runs are reproducible across machines/CI: jit
+# compilation makes first examples orders of magnitude slower than the
+# rest, so wall-clock deadlines and the too_slow health check are noise
+# here — example counts (below) are the budget that matters.
+settings.register_profile(
+    "repro", deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("repro")
 
 SETTINGS = dict(max_examples=25, deadline=None)
 

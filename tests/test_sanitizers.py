@@ -1,0 +1,187 @@
+"""Runtime sanitizers over the serving stack: the fused path performs ZERO
+implicit device<->host transfers per steady-state batch, repeated waves of
+the same (index-kind, batch-bucket) cell never recompile, and the online
+index's append/recluster/query/close surface survives an adversarial
+interleaving under a deadlock watchdog."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizers import DeadlockError
+from repro.core.dataset import RoutingDataset
+from repro.core.routers import knn as knn_mod
+from repro.core.routers.knn import KNNRouter
+from repro.kernels.knn_ivf.ops import DynamicIVFIndex, build_ivf_index, \
+    ivf_topk
+from repro.serving.router_service import RouterService
+
+D = 24
+MODELS = ["m-a", "m-b", "m-c"]
+INDEXES = ["exact", "ivf", "ivfpq"]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    rng = np.random.default_rng(11)
+    emb = rng.normal(size=(220, D)).astype(np.float32)
+    return RoutingDataset(
+        "sanitizers", emb,
+        rng.uniform(0.2, 1.0, (220, 3)).astype(np.float32),
+        rng.uniform(0.001, 0.01, (220, 3)).astype(np.float32), MODELS)
+
+
+def _service(ds, index):
+    # force the fused cell so every index kind takes the single-dispatch
+    # path this file's invariants are about
+    r = KNNRouter(k=7, index=index, backend="fused").fit(ds)
+    return RouterService(r, {n: None for n in MODELS}, lam=0.5)
+
+
+# ---------------------------------------------------------------------------
+# transfer guard: the fused path is one EXPLICIT dispatch per batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("index", INDEXES)
+def test_route_fused_zero_implicit_transfers(ds, index,
+                                             no_implicit_transfers):
+    """After warmup, a steady-state `route_fused` batch must run with jax's
+    transfer guard set to "disallow": every host->device movement on the
+    hot path is an explicit jnp.asarray/device_put at the batch boundary,
+    so an implicit transfer (a python scalar or np array leaking into a
+    jitted call) raises instead of silently costing a sync per batch."""
+    svc = _service(ds, index)
+    X = ds.part("test")[0][:16]
+    lam = np.full(16, 0.7, np.float32)
+    warm = svc.route_fused(X, lam)          # compile + device-commit caches
+    svc.route_fused(X, lam)
+    with no_implicit_transfers():
+        guarded = svc.route_fused(X, lam)
+    for w, g in zip(warm, guarded):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_transfer_guard_fixture_actually_fires(no_implicit_transfers):
+    """Negative control: the guard must reject an implicit transfer, or the
+    serving test above proves nothing on this backend."""
+    import jax
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with no_implicit_transfers():
+            jax.jit(lambda v, s: v * s)(jnp.ones(3), 2.0)  # scalar leaks h2d
+
+
+# ---------------------------------------------------------------------------
+# retrace counter: one compile per (index-kind, batch-bucket) cell
+# ---------------------------------------------------------------------------
+
+SERVE_JITS = {
+    "serve_fused": knn_mod._serve_fused_jit,
+    "serve_tail": knn_mod._serve_tail_jit,
+    "utility": knn_mod._utility_jit,
+    "confidence": knn_mod._confidence_jit,
+    "select": knn_mod._select_jit,
+}
+
+
+def test_no_retrace_across_repeated_waves(ds, retrace_counter):
+    """Every (index-kind, batch-bucket) cell compiles at most once: after
+    one warmup call per cell, repeated waves through all cells must not
+    grow any serving jit cache."""
+    services = {index: _service(ds, index) for index in INDEXES}
+    X = ds.part("test")[0]
+    buckets = (8, 32)
+    for index, svc in services.items():
+        for b in buckets:
+            svc.route_fused(X[:b])          # one warmup per cell
+    rc = retrace_counter(SERVE_JITS)        # snapshots post-warmup
+    for _ in range(3):                      # repeated waves, same cells
+        for index, svc in services.items():
+            for b in buckets:
+                svc.route_fused(X[:b])
+    assert rc.retraces() == {}, (
+        f"serving jits recompiled on repeated same-shape waves: "
+        f"{rc.retraces()}")
+
+
+def test_new_bucket_compiles_at_most_once(ds, retrace_counter):
+    """A previously unseen batch bucket costs exactly one compile of the
+    fused serve kernel, then goes quiet."""
+    svc = _service(ds, "ivfpq")
+    X = ds.part("test")[0]
+    svc.route_fused(X[:8])
+    rc = retrace_counter({"serve_fused": knn_mod._serve_fused_jit})
+    svc.route_fused(X[:48])                 # new bucket: one compile
+    assert rc.retraces() == {"serve_fused": 1}
+    rc.snapshot()
+    for _ in range(3):
+        svc.route_fused(X[:48])
+    assert rc.retraces() == {}
+
+
+# ---------------------------------------------------------------------------
+# deadlock watchdog: append / recluster / query / close interleaving
+# ---------------------------------------------------------------------------
+
+def test_online_index_interleaving_under_watchdog(watchdog):
+    rng = np.random.default_rng(2)
+    rows = rng.normal(size=(400, D)).astype(np.float32)
+    dyn = DynamicIVFIndex(build_ivf_index(rows, n_clusters=8, seed=0),
+                          delta_cap=64)
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    stop = threading.Event()
+    appended = []
+
+    def appender():
+        for i in range(25):
+            ids = dyn.append(rng.normal(size=(3, D)).astype(np.float32))
+            appended.append(len(ids))
+            time.sleep(0.001)
+        stop.set()
+
+    def querier():
+        while not stop.is_set():
+            sc, ix = ivf_topk(jnp.asarray(q), dyn, 10)
+            assert np.asarray(sc).shape == (4, 10)
+
+    def recluster_loop():
+        while not stop.is_set():
+            dyn.recluster(sync=False)
+            time.sleep(0.002)
+        dyn.join_recluster()
+
+    def closer():
+        # close() semantics: concurrent join_recluster callers, repeatedly
+        while not stop.is_set():
+            dyn.join_recluster()
+            time.sleep(0.001)
+
+    watchdog([appender, querier, querier, recluster_loop, closer],
+             timeout=120.0)
+    dyn.join_recluster()
+    assert dyn.n_rows == 400 + sum(appended)
+    assert dyn.appends == sum(appended)
+
+
+def test_watchdog_reports_a_real_deadlock(watchdog):
+    """Negative control: an actual lock-order inversion must surface as
+    DeadlockError with live stacks, not a silent CI timeout."""
+    a, b = threading.Lock(), threading.Lock()
+    gate = threading.Barrier(2)
+
+    def w1():
+        with a:
+            gate.wait()
+            with b:
+                pass
+
+    def w2():
+        with b:
+            gate.wait()
+            with a:
+                pass
+
+    with pytest.raises(DeadlockError, match="live"):
+        watchdog([w1, w2], timeout=2.0)
