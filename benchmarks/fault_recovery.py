@@ -1,0 +1,230 @@
+"""Serving resilience benchmark: latency and goodput through an outage.
+
+Three phases through the SAME entry points production traffic uses
+(`MicroBatcher.submit` -> `flush` -> `RouterService.execute`):
+
+  * ``healthy``  — all engines up; baseline wave p50/p99.
+  * ``outage``   — the engine the router prefers is fault-injected
+                   (raise, then a hang that trips the engine deadline).
+                   The first failing wave pays the detection cost (deadline
+                   join + reroute); once the circuit breaker opens, later
+                   waves route around the dead engine INSIDE the fused
+                   dispatch (availability mask), so the p99 during the
+                   outage is bounded by detection, not by repeated hangs.
+  * ``recovery`` — the fault is healed; the breaker's half-open probe
+                   re-admits the engine and must re-close.
+
+Reported per phase: wave-latency p50/p99, goodput (completed / submitted),
+reroutes, typed failures, and shed count.  The contract measured here is
+"never a silent drop": every submitted ticket must resolve to a completed
+result or a typed error — an unresolved ticket fails the benchmark
+outright.
+
+``--check`` asserts the declared bounds: zero silent drops in every phase,
+goodput 1.0 while healthy, outage goodput >= 0.9 with outage p99 within
+``engine_timeout + OUTAGE_SLACK_X * healthy_p99 + OUTAGE_SLACK_S``, and the
+breaker CLOSED again (goodput 1.0) after recovery.  ``--emit-bench PATH``
+merges a ``fault_recovery`` section into `BENCH_serving.json` (the rest of
+the file — serving_latency's grid — is left untouched).
+
+Env knobs: REPRO_FAULT_WAVES (waves per phase, default 6; 4 under
+--quick), REPRO_FAULT_WAVE_N (requests per wave, 4).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.dataset import RoutingDataset
+from repro.core.routers.knn import KNNRouter
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import FaultInjector, Overloaded
+from repro.serving.router_service import RouterService
+from repro.serving.scheduler import MicroBatcher
+
+from .common import RESULTS, write_csv
+
+MODELS = ["backup-a", "primary", "backup-b"]
+ENGINE_TIMEOUT_S = 0.25
+#: declared p99 bound during the outage: one deadline join (detection) plus
+#: a rerouted wave on the backup, with timing slack
+OUTAGE_SLACK_X = 5.0
+OUTAGE_SLACK_S = 0.10
+
+
+def _routing_ds(n=80, seed=0):
+    from repro.serving import encoder
+    texts = [f"topic {i % 3} example {i}" for i in range(n)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(seed)
+    scores = np.full((n, len(MODELS)), 0.2, np.float32)
+    scores[:, 1] = 0.9                      # lam=0 prefers "primary"
+    costs = rng.uniform(0.001, 0.01, (n, len(MODELS))).astype(np.float32)
+    return RoutingDataset("fault-bench", emb, scores, costs, list(MODELS))
+
+
+def _phase(mb, svc, waves, wave_n, tag):
+    """Run ``waves`` submit->flush->execute rounds; resolve every ticket."""
+    lat, done, failed, shed = [], 0, 0, 0
+    reroutes = 0
+    for w in range(waves):
+        tickets = []
+        t0 = time.perf_counter()
+        for i in range(wave_n):
+            try:
+                tickets.append(mb.submit(f"{tag} wave {w} req {i}"))
+            except Overloaded:
+                shed += 1
+        batch = mb.flush()
+        report = svc.execute(batch)
+        lat.append(time.perf_counter() - t0)
+        reroutes += len(report.rerouted)
+        for t in tickets:
+            r = mb.pop_result(t)
+            if r is None:                   # lost ticket = silent drop
+                raise AssertionError(f"ticket {t} never resolved ({tag})")
+            if r.request.done:
+                done += 1
+            elif r.request.error:
+                failed += 1
+            else:
+                raise AssertionError(
+                    f"request {r.uid} neither done nor errored ({tag})")
+    submitted = waves * wave_n
+    return {
+        "waves": waves, "submitted": submitted, "done": done,
+        "failed_typed": failed, "shed": shed, "rerouted": reroutes,
+        "silent_drops": submitted - done - failed - shed,
+        "goodput": round(done / max(submitted - shed, 1), 4),
+        "p50_wave_s": round(float(np.percentile(lat, 50)), 6),
+        "p99_wave_s": round(float(np.percentile(lat, 99)), 6),
+    }
+
+
+def run(seed: int = 0, emit: str | None = None, quick: bool = False,
+        check: bool = False):
+    waves = int(os.environ.get("REPRO_FAULT_WAVES", 4 if quick else 6))
+    wave_n = int(os.environ.get("REPRO_FAULT_WAVE_N", 4))
+
+    engines = {m: ServingEngine(reduced(get_config("qwen3-4b")),
+                                max_slots=wave_n, cache_len=48, seed=i)
+               for i, m in enumerate(MODELS)}
+    for eng in engines.values():            # compile outside the timings
+        eng.run_until_drained([Request(
+            uid=-1, prompt_tokens=np.arange(4, dtype=np.int64)
+            % eng.cfg.vocab_size, max_new_tokens=1)])
+    chaos = FaultInjector(engines["primary"])
+    engines["primary"] = chaos
+
+    router = KNNRouter(k=5, index="ivf", n_clusters=4).fit(
+        _routing_ds(seed=seed))
+    svc = RouterService(router, engines, lam=0.0,
+                        engine_timeout_s=ENGINE_TIMEOUT_S,
+                        breaker={"failure_threshold": 2,
+                                 "base_backoff_s": 5.0})
+    mb = MicroBatcher(svc, max_batch=wave_n, max_pending=8 * wave_n)
+
+    _phase(mb, svc, 1, wave_n, "warmup")    # route_fused jit, discarded
+    healthy = _phase(mb, svc, waves, wave_n, "healthy")
+
+    # outage: one raising wave (failure 1 of 2, breaker still closed),
+    # then hangs — the first hang wave pays the deadline join and opens
+    # the breaker (backoff 5s > phase length), so every later wave routes
+    # around the dead engine inside the fused dispatch and the hang is
+    # never dispatched again
+    chaos.set_mode("raise")
+    out_stats = _phase(mb, svc, 1, wave_n, "outage-raise")
+    chaos.set_mode("hang")
+    hang_stats = _phase(mb, svc, waves - 1, wave_n, "outage-hang")
+    outage = {
+        k: (out_stats[k] + hang_stats[k] if isinstance(out_stats[k], int)
+            else round(max(out_stats[k], hang_stats[k]), 6))
+        for k in out_stats}
+    outage["goodput"] = round(
+        (out_stats["done"] + hang_stats["done"])
+        / max(outage["submitted"] - outage["shed"], 1), 4)
+    breaker_open = svc.health["primary"].stats()
+
+    # recovery: heal, let the breaker's backoff elapse, serve again — the
+    # half-open probe re-admits the primary and a clean wave re-closes it
+    chaos.set_mode(None)
+    svc.health["primary"].opened_at -= svc.health["primary"].backoff_s
+    recovery = _phase(mb, svc, waves, wave_n, "recovery")
+    mb.close()
+    breaker_end = svc.health["primary"].stats()
+
+    declared_p99 = round(ENGINE_TIMEOUT_S
+                         + OUTAGE_SLACK_X * healthy["p99_wave_s"]
+                         + OUTAGE_SLACK_S, 6)
+    out = {
+        "engine_timeout_s": ENGINE_TIMEOUT_S,
+        "declared_outage_p99_s": declared_p99,
+        "wave_n": wave_n,
+        "phases": {"healthy": healthy, "outage": outage,
+                   "recovery": recovery},
+        "injected": dict(chaos.injected),
+        "breaker": {"during_outage": breaker_open, "end": breaker_end},
+    }
+
+    rows = [[ph, v["submitted"], v["done"], v["failed_typed"], v["shed"],
+             v["rerouted"], v["silent_drops"], v["goodput"],
+             v["p50_wave_s"], v["p99_wave_s"]]
+            for ph, v in out["phases"].items()]
+    write_csv(RESULTS / "fault_recovery.csv",
+              ["phase", "submitted", "done", "failed_typed", "shed",
+               "rerouted", "silent_drops", "goodput", "p50_wave_s",
+               "p99_wave_s"], rows)
+    for ph, v in out["phases"].items():
+        print(f"  faults {ph}: goodput={v['goodput']} "
+              f"p50={v['p50_wave_s']*1e3:.1f}ms "
+              f"p99={v['p99_wave_s']*1e3:.1f}ms rerouted={v['rerouted']} "
+              f"failed={v['failed_typed']} drops={v['silent_drops']}")
+    print(f"  faults breaker: outage={breaker_open['state']} "
+          f"end={breaker_end['state']} opens={breaker_end['opens']} "
+          f"declared_p99={declared_p99*1e3:.0f}ms")
+
+    if emit:
+        merged = {}
+        if os.path.exists(emit):
+            with open(emit) as f:
+                merged = json.load(f)
+        merged["fault_recovery"] = out
+        with open(emit, "w") as f:
+            json.dump(merged, f, indent=2)
+            f.write("\n")
+        print(f"  [bench] {emit} (fault_recovery section)")
+
+    if check:
+        for ph, v in out["phases"].items():
+            assert v["silent_drops"] == 0, \
+                f"{ph}: {v['silent_drops']} silent drops"
+        assert healthy["goodput"] == 1.0, f"healthy goodput: {healthy}"
+        assert outage["goodput"] >= 0.9, f"outage goodput: {outage}"
+        assert outage["p99_wave_s"] <= declared_p99, (
+            f"outage p99 {outage['p99_wave_s']}s exceeds the declared "
+            f"bound {declared_p99}s")
+        assert breaker_open["state"] == "open", breaker_open
+        assert breaker_end["state"] == "closed", breaker_end
+        assert recovery["goodput"] == 1.0, f"recovery goodput: {recovery}"
+        print("  faults --check: zero silent drops, outage p99 within "
+              f"{declared_p99}s, breaker re-closed OK")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer waves (CI shapes)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert zero silent drops, the declared outage "
+                         "p99 bound, and breaker recovery")
+    ap.add_argument("--emit-bench", default=None, metavar="PATH",
+                    help="merge a fault_recovery section into e.g. "
+                         "BENCH_serving.json")
+    args = ap.parse_args()
+    run(emit=args.emit_bench, quick=args.quick, check=args.check)

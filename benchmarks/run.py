@@ -34,20 +34,23 @@ def main() -> None:
                          "implies running the 'ivf' sweep")
     args = ap.parse_args()
 
-    from . import (bandit_online, fig1_locality, intrinsic_dim, ivf_recall,
-                   seed_stability, serving_latency, table2_text_auc,
-                   table3_latency, table4_ood, table5_vlm_auc,
-                   tableD_selection, tableF_scaling, tableI_embeddings,
+    from . import (bandit_online, fault_recovery, fig1_locality,
+                   intrinsic_dim, ivf_recall, seed_stability,
+                   serving_latency, table2_text_auc, table3_latency,
+                   table4_ood, table5_vlm_auc, tableD_selection,
+                   tableF_scaling, tableI_embeddings,
                    thm72_sample_complexity)
 
     # quick mode exercises the harness end-to-end on the fast tables; the
     # complete 12-router Tables 2/4/5/D/I ship in results/ from `--full`.
     quick_default = ["fig1", "intrinsic", "tableF", "seeds", "table3"]
     full_suite = quick_default + ["table4", "table5", "tableD", "tableI",
-                                  "seeds", "bandit", "ivf", "serving"]
+                                  "seeds", "bandit", "ivf", "serving",
+                                  "faults"]
     jobs = {
         "ivf": ivf_recall.run,
         "serving": serving_latency.run,
+        "faults": fault_recovery.run,
         "table2": table2_text_auc.run,
         "table3": table3_latency.run,
         "table4": table4_ood.run,

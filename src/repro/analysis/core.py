@@ -31,6 +31,7 @@ RULE_PRAGMA = {
     "R1": "allow-host",
     "R2": "allow-unlocked",
     "R4": "allow-jit-cache",
+    "R5": "allow-swallow",
 }
 
 

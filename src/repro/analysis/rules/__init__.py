@@ -1,12 +1,13 @@
 """Rule registry.  Each rule is ``run(project, config) -> List[Finding]``;
 the engine applies pragmas and the baseline afterwards."""
-from . import host_sync, jit_cache, lock_discipline, schema_pin
+from . import host_sync, jit_cache, lock_discipline, schema_pin, swallow
 
 ALL_RULES = {
     "R1": host_sync.run,
     "R2": lock_discipline.run,
     "R3": schema_pin.run,
     "R4": jit_cache.run,
+    "R5": swallow.run,
 }
 
 __all__ = ["ALL_RULES"]

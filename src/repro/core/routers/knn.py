@@ -58,6 +58,7 @@ staged calls because both share the same jitted kernels.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import numpy as np
@@ -135,40 +136,48 @@ def _confidence_jit(sims, idx, S):
 
 
 @jax.jit
-def _select_jit(s_hat, c_hat, lam):
+def _select_jit(s_hat, c_hat, lam, avail):
     """Per-request-lambda utility argmax — the single decision kernel every
-    routing path (legacy batched serving and the fused path) shares."""
+    routing path (legacy batched serving and the fused path) shares.
+
+    ``avail`` is the per-model availability mask (bool, (M,)): models whose
+    circuit breaker is open score -inf in the argmax, so routing around an
+    outage happens INSIDE the fused dispatch.  With an all-ones mask the
+    `where` selects ``util`` verbatim — bitwise identical to the unmasked
+    kernel, which is what the parity suites pin.  The returned utilities
+    are unmasked (callers report the true estimates for every model)."""
     util = s_hat - lam[:, None] * c_hat
-    return jnp.argmax(util, axis=1), util
+    masked = jnp.where(avail[None, :], util, -jnp.inf)
+    return jnp.argmax(masked, axis=1), util
 
 
 @functools.partial(jax.jit, static_argnames=("weights", "temperature"))
-def _serve_tail_jit(sims, idx, S, C, lam, *, weights: str,
+def _serve_tail_jit(sims, idx, S, C, lam, avail, *, weights: str,
                     temperature: float):
     """Retrieval results -> (choice, s_hat, c_hat, kth, agree) in ONE
-    dispatch: utility, confidence, and per-request-lambda selection fused.
-    The inner calls are the same jitted kernels the legacy path runs
-    separately, preserved as subcomputations — identical numerics, one
-    device sync instead of three."""
+    dispatch: utility, confidence, and per-request-lambda availability-
+    masked selection fused.  The inner calls are the same jitted kernels
+    the legacy path runs separately, preserved as subcomputations —
+    identical numerics, one device sync instead of three."""
     s_hat, c_hat = _utility_jit(sims, idx, S, C, weights=weights,
                                 temperature=temperature)
     kth, agree = _confidence_jit(sims, idx, S)
-    choice, _ = _select_jit(s_hat, c_hat, lam)
+    choice, _ = _select_jit(s_hat, c_hat, lam, avail)
     return choice, s_hat, c_hat, kth, agree
 
 
 @functools.partial(jax.jit, static_argnames=("search", "weights",
                                              "temperature"))
-def _serve_fused_jit(queries, lam, S, C, *search_args, search, weights: str,
-                     temperature: float):
+def _serve_fused_jit(queries, lam, avail, S, C, *search_args, search,
+                     weights: str, temperature: float):
     """The whole routed batch in ONE device dispatch: retrieval (the
     jitted single-dispatch search this router's index supports), neighbour-
     weighted utility, confidence diagnostics, and per-request-lambda
-    selection.  ``search`` is a cached `functools.partial` of a module-level
-    jitted search (static by identity, so the jit cache is stable across
-    calls)."""
+    availability-masked selection.  ``search`` is a cached
+    `functools.partial` of a module-level jitted search (static by
+    identity, so the jit cache is stable across calls)."""
     sims, idx = search(queries, *search_args)
-    return _serve_tail_jit(sims, idx, S, C, lam, weights=weights,
+    return _serve_tail_jit(sims, idx, S, C, lam, avail, weights=weights,
                            temperature=temperature)
 
 
@@ -207,6 +216,10 @@ class KNNRouter(Router):
         self.online = bool(online)
         self.delta_cap = int(delta_cap)
         self.backend = backend
+        #: degradation state (set by the `degraded` context manager for the
+        #: duration of one wave): serve from the compacted base only,
+        #: giving up rows still in the streaming delta tier
+        self._skip_delta = False
         #: fitted `DispatchPolicy` (or None = static defaults) — set by the
         #: serving benchmark / artifact load, not a constructor parameter,
         #: so spec strings and ``router_config`` stay policy-free
@@ -270,6 +283,32 @@ class KNNRouter(Router):
         ivf = getattr(self, "_ivf", None)
         if isinstance(ivf, DynamicIVFIndex):
             ivf.join_recluster()
+
+    # ---- deadline-driven graceful degradation ----
+    @contextlib.contextmanager
+    def degraded(self, level=None):
+        """Serve the enclosed wave at a degradation level: any object with
+        ``nprobe_scale`` / ``rerank`` / ``skip_delta`` attributes (see
+        `repro.serving.faults.DegradationLevel`; duck-typed so the core
+        router never imports the serving layer).  Overrides are restored on
+        exit.  ``None`` or level 0 is a no-op — the hot path stays
+        untouched.  Not re-entrant across threads: the serving loop applies
+        it from the single routing thread."""
+        if level is None or not (level.nprobe_scale != 1.0
+                                 or level.rerank is not None
+                                 or level.skip_delta):
+            yield
+            return
+        saved = (self.nprobe, self.rerank, self._skip_delta)
+        try:
+            self.nprobe = max(1, int(round(self.nprobe
+                                           * level.nprobe_scale)))
+            if level.rerank is not None:
+                self.rerank = int(level.rerank)
+            self._skip_delta = bool(level.skip_delta)
+            yield
+        finally:
+            self.nprobe, self.rerank, self._skip_delta = saved
 
     # ---- fit = store the support set (+ coarse quantizer / PQ codebooks) --
     def _index_build_kw(self, seed: int) -> dict:
@@ -384,24 +423,30 @@ class KNNRouter(Router):
         bq = self._policy_tiles().get("block_q")
         if bq and be in ("tiles", "pallas"):
             kw["block_q"] = int(bq)
+        ivf = getattr(self, "_ivf", None)
+        if self._skip_delta and isinstance(ivf, DynamicIVFIndex):
+            # degraded wave: serve the compacted base only (give up delta
+            # rows instead of paying the merge under deadline pressure)
+            with ivf._lock:
+                ivf = ivf.base
         if self.index == "ivfpq":
             if self.mesh is not None:
                 from ..sharded_knn import sharded_ivfpq_topk
-                sims, idx = sharded_ivfpq_topk(jnp.asarray(q), self._ivf, k,
+                sims, idx = sharded_ivfpq_topk(jnp.asarray(q), ivf, k,
                                                self.mesh, nprobe=self.nprobe,
                                                rerank=self.rerank)
             else:
-                sims, idx = ivfpq_topk(jnp.asarray(q), self._ivf, k,
+                sims, idx = ivfpq_topk(jnp.asarray(q), ivf, k,
                                        nprobe=self.nprobe,
                                        rerank=self.rerank,
                                        backend=be, **kw)
         elif self.index == "ivf":
             if self.mesh is not None:
                 from ..sharded_knn import sharded_ivf_topk
-                sims, idx = sharded_ivf_topk(jnp.asarray(q), self._ivf, k,
+                sims, idx = sharded_ivf_topk(jnp.asarray(q), ivf, k,
                                              self.mesh, nprobe=self.nprobe)
             else:
-                sims, idx = ivf_topk(jnp.asarray(q), self._ivf, k,
+                sims, idx = ivf_topk(jnp.asarray(q), ivf, k,
                                      nprobe=self.nprobe,
                                      backend=be, **kw)
         elif self.mesh is not None:
@@ -525,6 +570,11 @@ class KNNRouter(Router):
                 base = ivf.base
                 delta = ivf.delta_rows
                 st = ivf.fused_state() if delta else None
+            if self._skip_delta:
+                # degraded wave: serve the compacted base only (give up
+                # delta rows instead of paying the probed merge under
+                # deadline pressure)
+                delta, st = 0, None
         else:
             base, delta, st = ivf, 0, None
         nprobe = max(1, min(self.nprobe, base.n_clusters))
@@ -567,7 +617,38 @@ class KNNRouter(Router):
             args += (st["dl_sup"], st["dl_ids"], st["dl_inv"])
         return self._dev["search"], args
 
-    def serve_fused(self, X: np.ndarray, lam: np.ndarray, qmesh=None):
+    def _avail_dev(self, avail=None):
+        """Device-resident per-model availability mask (bool, (M,)) for the
+        fused selection.  ``None`` means every model is up — the all-ones
+        mask is cached once per model-axis width, and `_select_jit`'s
+        ``where`` passes utilities through verbatim, so the default path is
+        bitwise identical to the pre-mask kernel.  Explicit masks are cached
+        by content so a stable outage pattern keeps a stable device array
+        (no re-upload per wave, and `_serve_sharded`'s identity-keyed
+        replication cache keeps hitting)."""
+        M = self._S.shape[1]
+        if avail is None:
+            ones = self._dev.get("avail_ones")
+            if ones is None or ones.shape != (M,):
+                ones = jnp.ones((M,), jnp.bool_)
+                self._dev["avail_ones"] = ones
+            return ones
+        # repro: allow-host: availability arrives as host health metadata
+        a = np.asarray(avail, dtype=bool).reshape(-1)
+        if a.shape != (M,):
+            raise ValueError(f"availability mask must have shape ({M},) to "
+                             f"match the model axis, got {a.shape}")
+        if not a.any():
+            raise ValueError("availability mask excludes every model; "
+                             "routing has no candidate to select")
+        key = a.tobytes()
+        if self._dev.get("avail_key") != key:
+            self._dev["avail"] = jnp.asarray(a)
+            self._dev["avail_key"] = key
+        return self._dev["avail"]
+
+    def serve_fused(self, X: np.ndarray, lam: np.ndarray, qmesh=None,
+                    avail=None):
         """One routed batch, ONE device dispatch: retrieval + neighbour
         utility + confidence + per-request-lambda selection inside a single
         jit (`_serve_fused_jit`).  Returns numpy
@@ -582,6 +663,11 @@ class KNNRouter(Router):
         ``qmesh``: optional mesh to shard the BATCH axis over (replicated
         index) — bitwise-identical results, near-linear scaling for the
         gather-bound fused search.
+
+        ``avail``: optional per-model availability mask (bool, (M,)) — open-
+        circuit models are excluded from the utility argmax INSIDE the fused
+        dispatch (`_select_jit` masks them to -inf).  ``None``/all-ones is
+        bitwise identical to the unmasked kernel.
 
         The retrieval stage is chosen PER BATCH by `resolve_backend`: with
         a fitted dispatch policy a batch lands on the measured-fastest
@@ -598,6 +684,7 @@ class KNNRouter(Router):
         # transfer-guard sanitizer rejects
         lam_j = jnp.asarray(lam, jnp.float32)
         S, C = self._SC_dev()
+        av = self._avail_dev(avail)
         eff = self.resolve_backend(len(X))
         if self.index == "exact" and eff not in ("fused", "pallas"):
             search, args = None, None
@@ -606,21 +693,22 @@ class KNNRouter(Router):
         if search is None:
             sims, idx = self._neighbors(X, backend=eff)
             out = _serve_tail_jit(jnp.asarray(sims), jnp.asarray(idx), S, C,
-                                  lam_j, weights=self.weights,
+                                  lam_j, av, weights=self.weights,
                                   temperature=float(self.temperature))
             # repro: allow-host: the single end-of-batch materialization
             return tuple(np.asarray(o) for o in out)
         q = jnp.asarray(normalize_rows(X))
         if qmesh is None:
-            out = _serve_fused_jit(q, lam_j, S, C, *args, search=search,
+            out = _serve_fused_jit(q, lam_j, av, S, C, *args, search=search,
                                    weights=self.weights,
                                    temperature=float(self.temperature))
         else:
-            out = self._serve_sharded(qmesh, q, lam_j, S, C, search, args)
+            out = self._serve_sharded(qmesh, q, lam_j, av, S, C, search,
+                                      args)
         # repro: allow-host: the single end-of-batch materialization
         return tuple(np.asarray(o) for o in out)
 
-    def _serve_sharded(self, qmesh, q, lam, S, C, search, args):
+    def _serve_sharded(self, qmesh, q, lam, avail, S, C, search, args):
         """`_serve_fused_jit` with the batch sharded across ``qmesh`` —
         every per-query lane of the fused path is independent, so shard_map
         over the query axis is exact (verified bitwise in tests).  The
@@ -636,12 +724,13 @@ class KNNRouter(Router):
             axes = tuple(qmesh.axis_names)
 
             def local(qs, lams, *arrs):
-                sims, idx = search(qs, *arrs[:-2])
-                return _serve_tail_jit(sims, idx, arrs[-2], arrs[-1], lams,
-                                       weights=self.weights,
+                sims, idx = search(qs, *arrs[:-3])
+                return _serve_tail_jit(sims, idx, arrs[-3], arrs[-2], lams,
+                                       arrs[-1], weights=self.weights,
                                        temperature=float(self.temperature))
 
-            specs = (P(axes), P(axes)) + tuple(P() for _ in args) + (P(), P())
+            specs = (P(axes), P(axes)) + tuple(P() for _ in args) + (P(), P(),
+                                                                     P())
             # repro: allow-jit-cache: cached in self._dev under `key` above
             cached = jax.jit(shmap.shard_map(
                 local, mesh=qmesh, in_specs=specs,
@@ -650,7 +739,7 @@ class KNNRouter(Router):
             self._dev["qmesh_fn"] = cached
             self._dev["qmesh_key"] = key
         rep = NamedSharding(qmesh, P())
-        src = (*args, S, C)
+        src = (*args, S, C, avail)
         prev = self._dev.get("qmesh_args_src")
         # identity comparison against RETAINED source arrays (not bare ids:
         # a freed wrapper's address can be reused by a new array, which

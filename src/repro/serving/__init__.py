@@ -1,1 +1,2 @@
-from . import encoder, engine, pipeline, router_service, scheduler  # noqa: F401
+from . import (encoder, engine, faults, pipeline,  # noqa: F401
+               router_service, scheduler)

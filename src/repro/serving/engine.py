@@ -33,6 +33,21 @@ class Request:
     done: bool = False
     t_submit: float = 0.0
     t_finish: float = 0.0
+    #: terminal error state — set instead of ``done`` when the request can
+    #: no longer be served (drain truncation, no available engine); a
+    #: request always ends done, errored, or still owned by a live queue
+    error: Optional[str] = None
+
+
+class IncompleteDrainError(RuntimeError):
+    """`run_until_drained` hit ``max_steps`` with requests still pending —
+    the survivors are marked ``error="incomplete_drain"`` and carried on
+    the exception instead of being silently truncated."""
+
+    def __init__(self, msg: str, *, survivors: List["Request"], steps: int):
+        super().__init__(msg)
+        self.survivors = survivors
+        self.steps = steps
 
 
 class ServingEngine:
@@ -117,14 +132,44 @@ class ServingEngine:
                 self.slot_req[s] = None
                 self.pos[s] = -1
 
+    def release(self, reqs: List[Request]) -> int:
+        """Evict ``reqs`` from their decode slots (freeing cache positions)
+        without marking them done — the reroute path reclaims a failed
+        wave's slots before handing the requests to another engine.
+        Returns the number of slots freed."""
+        wanted = {id(r) for r in reqs}
+        freed = 0
+        for s, r in enumerate(self.slot_req):
+            if r is not None and id(r) in wanted:
+                self.slot_req[s] = None
+                self.pos[s] = -1
+                freed += 1
+        return freed
+
     def run_until_drained(self, pending: List[Request],
                           max_steps: int = 10_000) -> int:
         """Admit + decode until every request finishes (requests mark
-        themselves done; the caller keeps the references)."""
+        themselves done; the caller keeps the references).
+
+        Hitting ``max_steps`` with work outstanding is an error, not a
+        silent truncation: every survivor — still queued or mid-slot — is
+        marked with a terminal ``error="incomplete_drain"`` state, evicted
+        from its slot, and `IncompleteDrainError` carries the survivor
+        list so the caller can reroute or report each one."""
         pending = list(pending)
         steps = 0
-        while (pending or any(r is not None for r in self.slot_req)) \
-                and steps < max_steps:
+        while pending or any(r is not None for r in self.slot_req):
+            if steps >= max_steps:
+                survivors = pending + [r for r in self.slot_req
+                                       if r is not None]
+                for r in survivors:
+                    r.error = "incomplete_drain"
+                self.release(survivors)
+                raise IncompleteDrainError(
+                    f"engine drained {steps} steps but {len(survivors)} "
+                    f"request(s) remain unfinished (max_steps={max_steps}); "
+                    f"uids={[r.uid for r in survivors]}",
+                    survivors=survivors, steps=steps)
             while pending and self.has_free_slot():
                 self.admit(pending.pop(0))
             self.step()

@@ -41,8 +41,11 @@ picks up the policy's wave-close constants.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +55,9 @@ from repro.core.dataset import RoutingDataset
 from repro.core.routers import (Router, RouterSpec, load_router, make_router,
                                 spec_of)
 from . import encoder
-from .engine import Request, ServingEngine
+from .engine import IncompleteDrainError, Request, ServingEngine
+from .faults import (CircuitOpenError, DegradationLadder,
+                     EngineDeadlineExceeded, EngineHealth, ExecutionReport)
 
 
 @dataclasses.dataclass
@@ -64,15 +69,24 @@ class RoutedResult:
     predicted_cost: float
     lam: float = 0.0
     confidence: Optional[float] = None
+    #: full per-model predicted score/cost rows — kept so a mid-execution
+    #: failure can reroute to the NEXT-best-utility model deterministically
+    #: (the paper's point: the kNN router already priced the whole pool)
+    s_row: Optional[np.ndarray] = None
+    c_row: Optional[np.ndarray] = None
+    #: degradation-ladder level the wave was served at (0 = full fidelity)
+    degradation: int = 0
+    #: engines this request failed over from, in order
+    rerouted_from: List[str] = dataclasses.field(default_factory=list)
 
 
-def _route_batch(s_hat, c_hat, lam):
-    """Single batched utility path: per-request lambda, argmax over models.
-    Delegates to the SAME jitted kernel the routers' fused serving path
-    inlines (`_select_jit`), so the legacy multi-dispatch chain and
-    `route_fused` make bitwise-identical decisions."""
+def _route_batch(s_hat, c_hat, lam, avail):
+    """Single batched utility path: per-request lambda, availability-masked
+    argmax over models.  Delegates to the SAME jitted kernel the routers'
+    fused serving path inlines (`_select_jit`), so the legacy multi-dispatch
+    chain and `route_fused` make bitwise-identical decisions."""
     from repro.core.routers.knn import _select_jit
-    return _select_jit(s_hat, c_hat, lam)
+    return _select_jit(s_hat, c_hat, lam, avail)
 
 
 def knn_service(ds: RoutingDataset, engines: Dict[str, "ServingEngine"],
@@ -97,7 +111,12 @@ class RouterService:
                  ds: Optional[RoutingDataset] = None,
                  lam: Optional[float] = None,
                  fallback_model: Optional[str] = None,
-                 confidence_floor: float = 0.02, seed: int = 0):
+                 confidence_floor: float = 0.02, seed: int = 0,
+                 breaker: Optional[Dict] = None,
+                 engine_timeout_s: Optional[float] = None,
+                 max_route_attempts: int = 3,
+                 retry_backoff_s: float = 0.0,
+                 ladder: Optional[DegradationLadder] = None):
         if isinstance(router, (str, RouterSpec)):
             router = make_router(router)
         if router.model_names is None and ds is None:
@@ -120,6 +139,17 @@ class RouterService:
         self._uid = 0
         self.observed = 0          # feedback rows ingested via observe()
         self.log: List[RoutedResult] = []
+        #: per-engine circuit breakers (``breaker`` = EngineHealth kwargs,
+        #: e.g. failure_threshold/base_backoff_s for tests with fake clocks)
+        self.health: Dict[str, EngineHealth] = {
+            m: EngineHealth(m, **(breaker or {})) for m in self.model_names}
+        #: wall-clock budget for one engine wave (None = no deadline; a hung
+        #: engine then blocks — production serving always sets one)
+        self.engine_timeout_s = engine_timeout_s
+        self.max_route_attempts = int(max_route_attempts)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.ladder = ladder if ladder is not None else DegradationLadder()
+        self._mask_cache: Dict = {}
 
     @classmethod
     def from_artifact(cls, path, engines: Dict[str, ServingEngine],
@@ -158,6 +188,33 @@ class RouterService:
     def dispatch_policy(self):
         """The router's fitted `DispatchPolicy`, or None (static defaults)."""
         return getattr(self.router, "dispatch_policy", None)
+
+    # ---- health / availability ----
+    def availability_mask(self) -> Optional[np.ndarray]:
+        """Per-model availability from the circuit breakers, in
+        ``model_names`` order — or None when every engine is up (the common
+        case: `serve_fused`'s cached all-ones default is bitwise identical
+        to pre-mask serving).  Calling this IS the open -> half_open probe
+        gate, so a backoff that has elapsed re-admits the engine here.
+        A total outage also returns None: an all-false mask has no argmax
+        candidate, so routing proceeds on utilities alone and `execute`
+        sheds with typed errors instead."""
+        flags = [self.health[m].available() for m in self.model_names]
+        if all(flags) or not any(flags):
+            return None
+        # repro: allow-host: availability is host-side health metadata
+        return np.asarray(flags, bool)
+
+    def stats(self) -> Dict:
+        """JSON-ready service health snapshot — the payload a gateway
+        ``/health`` endpoint will serve: per-engine breaker state plus
+        service counters."""
+        return {
+            "spec": self.spec,
+            "engines": {m: self.health[m].stats() for m in self.model_names},
+            "observed": self.observed,
+            "routed": len(self.log),
+        }
 
     # ---- lifecycle ----
     def close(self) -> None:
@@ -201,24 +258,50 @@ class RouterService:
                 f"router emitted {s_hat.shape[1]} model columns, expected "
                 f"{len(self.model_names)} ({self.model_names})")
 
+    def _avail_jnp(self, avail):
+        """Device-resident availability mask for the batched utility kernel
+        (all-ones when ``avail`` is None), cached by content so the legacy
+        chain never re-uploads it per batch.  Routers with a fused path
+        already keep this cache (`KNNRouter._avail_dev`); this reuses it so
+        both paths share one device array."""
+        ad = getattr(self.router, "_avail_dev", None)
+        if callable(ad):
+            return ad(avail)
+        M = len(self.model_names)
+        if avail is None:
+            ones = self._mask_cache.get("ones")
+            if ones is None or ones.shape != (M,):
+                ones = jnp.ones((M,), jnp.bool_)
+                self._mask_cache["ones"] = ones
+            return ones
+        # repro: allow-host: availability is host-side health metadata
+        a = np.asarray(avail, bool).reshape(-1)
+        key = a.tobytes()
+        if self._mask_cache.get("key") != key:
+            self._mask_cache["arr"] = jnp.asarray(a)
+            self._mask_cache["key"] = key
+        return self._mask_cache["arr"]
+
     def _choose(self, s_hat: np.ndarray, c_hat: np.ndarray, lam,
-                n: int) -> tuple:
+                n: int, avail=None) -> tuple:
         """Shared decision core: validate arity, resolve per-request lambdas,
-        run the jitted batched utility argmax."""
+        run the jitted batched availability-masked utility argmax."""
         self._check_arity(s_hat)
         lam_r = self._resolve_lam(lam, n)
         choice, _ = _route_batch(jnp.asarray(s_hat), jnp.asarray(c_hat),
-                                 jnp.asarray(lam_r))
+                                 jnp.asarray(lam_r), self._avail_jnp(avail))
         # repro: allow-host: the legacy chain's end-of-batch materialization
         return np.asarray(choice), lam_r
 
     def _decide(self, emb: np.ndarray, lam) -> tuple:
         s_hat, c_hat = self.router.predict_utility(emb)
-        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
+        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb),
+                                     self.availability_mask())
         return choice, s_hat, c_hat, lam_r
 
     # ---- fused single-dispatch hot path ----
-    def route_fused(self, emb: np.ndarray, lam=None, qmesh=None) -> tuple:
+    def route_fused(self, emb: np.ndarray, lam=None, qmesh=None,
+                    degrade: int = 0) -> tuple:
         """One routed batch, one device dispatch: retrieval -> per-model
         utility -> confidence -> per-request-lambda selection fused inside a
         single jit on routers that support it (`KNNRouter.serve_fused`),
@@ -226,20 +309,34 @@ class RouterService:
         chain for routers without a fused path — same numbers either way,
         because both paths share the same jitted kernels.
 
+        The circuit breakers feed an availability mask INTO the fused
+        selection: open-circuit models are -inf in the utility argmax, so
+        routing around an outage costs nothing on the hot path (all-up is
+        a cached all-ones mask, bitwise identical to pre-mask serving).
+        ``degrade`` serves the wave at that degradation-ladder level
+        (shrunk nprobe / dropped re-rank / base-only retrieval) on routers
+        that support it.
+
         Returns (choice, s_hat, c_hat, confidence-or-None, lam_r) as numpy.
         ``qmesh`` shards the batch axis across a device mesh (replicated
         index; bitwise-identical results)."""
         # repro: allow-host: input embeddings arrive as host data
         emb = np.atleast_2d(np.asarray(emb, np.float32))
         lam_r = self._resolve_lam(lam, len(emb))
+        avail = self.availability_mask()
         sf = getattr(self.router, "serve_fused", None)
         if callable(sf):
-            # serve_fused already returns numpy — no further conversion
-            choice, s_hat, c_hat, _, agree = sf(emb, lam_r, qmesh=qmesh)
+            dg = getattr(self.router, "degraded", None)
+            ctx = (dg(self.ladder[degrade]) if degrade and callable(dg)
+                   else contextlib.nullcontext())
+            with ctx:
+                # serve_fused already returns numpy — no further conversion
+                choice, s_hat, c_hat, _, agree = sf(emb, lam_r, qmesh=qmesh,
+                                                    avail=avail)
             self._check_arity(s_hat)
             return choice, s_hat, c_hat, agree, lam_r
         s_hat, c_hat, conf = self._predict_for_serving(emb)
-        choice, lam_r = self._choose(s_hat, c_hat, lam_r, len(emb))
+        choice, lam_r = self._choose(s_hat, c_hat, lam_r, len(emb), avail)
         return choice, s_hat, c_hat, conf, lam_r
 
     def route_legacy(self, emb: np.ndarray, lam=None) -> tuple:
@@ -250,7 +347,8 @@ class RouterService:
         `route_fused`."""
         emb = np.atleast_2d(np.asarray(emb, np.float32))
         s_hat, c_hat, conf = self._predict_for_serving(emb)
-        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb))
+        choice, lam_r = self._choose(s_hat, c_hat, lam, len(emb),
+                                     self.availability_mask())
         return choice, s_hat, c_hat, conf, lam_r
 
     def route_embeddings(self, emb: np.ndarray, lam=None) -> np.ndarray:
@@ -275,9 +373,11 @@ class RouterService:
         return s_hat, c_hat, None
 
     def submit_texts(self, texts: Sequence[str], prompts_tokens=None,
-                     max_new_tokens: int = 8, lam=None) -> List[RoutedResult]:
+                     max_new_tokens: int = 8, lam=None,
+                     degrade: int = 0) -> List[RoutedResult]:
         emb = encoder.embed_texts(list(texts))
-        choice, s_hat, c_hat, conf, lam_r = self.route_fused(emb, lam)
+        choice, s_hat, c_hat, conf, lam_r = self.route_fused(
+            emb, lam, degrade=degrade)
 
         results = []
         for i, text in enumerate(texts):
@@ -300,7 +400,10 @@ class RouterService:
                 predicted_score=float(s_hat[i, mi]),
                 predicted_cost=float(c_hat[i, mi]),
                 lam=float(lam_r[i]),
-                confidence=float(conf[i]) if conf is not None else None)
+                confidence=float(conf[i]) if conf is not None else None,
+                s_row=np.asarray(s_hat[i]).copy(),
+                c_row=np.asarray(c_hat[i]).copy(),
+                degradation=int(degrade))
             results.append(res)
         return results
 
@@ -344,15 +447,156 @@ class RouterService:
         return int(getattr(self.router, "support_size", -1))
 
     # ---- execution ----
-    def execute(self, results: List[RoutedResult]) -> Dict[str, int]:
-        by_model: Dict[str, List[Request]] = {}
-        for r in results:
-            by_model.setdefault(r.model, []).append(r.request)
-        steps = {}
-        for m, reqs in by_model.items():
-            steps[m] = self.engines[m].run_until_drained(reqs)
+    def _run_engine(self, m: str, reqs: List[Request]) -> int:
+        """One wave on one engine under the service deadline.  With a
+        deadline the wave runs on a daemon worker thread and a join timeout
+        raises `EngineDeadlineExceeded` — a hung engine can no longer block
+        the serving loop.  The hung worker keeps its slots (releasing them
+        out from under a live thread would race its decode); reroutes hand
+        FRESH Request objects to the next engine instead."""
+        eng = self.engines[m]
+        if self.engine_timeout_s is None:
+            return eng.run_until_drained(reqs)
+        box: Dict = {}
+
+        def worker():
+            try:
+                box["steps"] = eng.run_until_drained(reqs)
+            except BaseException as exc:
+                box["exc"] = exc
+
+        t = threading.Thread(target=worker, daemon=True,
+                             name=f"engine-wave-{m}")
+        t.start()
+        t.join(self.engine_timeout_s)
+        if t.is_alive():
+            raise EngineDeadlineExceeded(m, self.engine_timeout_s)
+        if "exc" in box:
+            raise box["exc"]
+        return box["steps"]
+
+    def _next_best(self, r: RoutedResult, tried: Set[str]) -> Optional[str]:
+        """Deterministic next-best model for a reroute.  The kNN router
+        already priced the WHOLE pool for this request (``s_row``/
+        ``c_row``), so the failover ranking is just the utility argsort of
+        the request's own row — skipping engines already tried this request
+        and engines whose breaker is open."""
+        if r.s_row is None or r.c_row is None:
+            for m in self.model_names:         # legacy result: first viable
+                if m not in tried and self.health[m].available():
+                    return m
+            return None
+        util = np.asarray(r.s_row, np.float32) - r.lam * np.asarray(
+            r.c_row, np.float32)
+        for mi in np.argsort(-util, kind="stable"):
+            m = self.model_names[int(mi)]
+            if m not in tried and self.health[m].available():
+                return m
+        return None
+
+    def _reroute(self, rs: List[RoutedResult], exc: BaseException,
+                 report: ExecutionReport, attempts: Dict[int, int],
+                 tried: Dict[int, Set[str]]
+                 ) -> List[Tuple[str, RoutedResult]]:
+        """Failover a failed wave's requests: each goes to its next-best-
+        utility available engine (fresh Request object — the failed engine,
+        possibly still hung, may hold the old one), or lands in
+        ``report.failed`` with a typed reason once its attempt budget or
+        the candidate pool is exhausted.  Never a silent drop."""
+        requeued = []
+        for r in rs:
+            tried.setdefault(r.uid, set()).add(r.model)
+            attempts[r.uid] = attempts.get(r.uid, 0) + 1
+            nxt = (self._next_best(r, tried[r.uid])
+                   if attempts[r.uid] < self.max_route_attempts else None)
+            if nxt is None:
+                if not r.request.error:
+                    r.request.error = type(exc).__name__
+                report.failed[r.uid] = f"{type(exc).__name__}: {exc}"
+                continue
+            report.rerouted.append((r.uid, r.model, nxt))
+            r.rerouted_from.append(r.model)
+            old = r.request
+            vocab = self.engines[nxt].cfg.vocab_size
+            r.request = Request(
+                uid=r.uid,
+                prompt_tokens=np.asarray(old.prompt_tokens,
+                                         np.int64) % vocab,
+                max_new_tokens=old.max_new_tokens)
+            r.model = nxt
+            if r.s_row is not None:       # attribute predictions to the
+                mi = self.model_names.index(nxt)   # model actually served
+                r.predicted_score = float(r.s_row[mi])
+                r.predicted_cost = float(r.c_row[mi])
+            requeued.append((nxt, r))
+        return requeued
+
+    def execute(self, results: List[RoutedResult]) -> ExecutionReport:
+        """Dispatch routed requests to their engines, isolating per-engine
+        failures: one engine raising/hanging no longer aborts the batch or
+        loses the log.  Per wave and per engine — an open breaker skips the
+        engine (its requests reroute immediately), a failure/timeout records
+        to that engine's breaker and reroutes the affected requests to their
+        next-best-utility model (fresh Request, deterministic order), and a
+        success re-closes the breaker.  Requests that exhaust
+        ``max_route_attempts`` or the candidate pool land in
+        ``report.failed`` with a typed reason.
+
+        Returns an `ExecutionReport` — still the ``{model: decode_steps}``
+        mapping this method always returned, now also carrying ``errors`` /
+        ``rerouted`` / ``skipped`` / ``failed``."""
+        report = ExecutionReport()
+        queue: List[Tuple[str, RoutedResult]] = [(r.model, r)
+                                                 for r in results]
+        attempts: Dict[int, int] = {}
+        tried: Dict[int, Set[str]] = {}
+        while queue:
+            by_model: Dict[str, List[RoutedResult]] = {}
+            for m, r in queue:
+                by_model.setdefault(m, []).append(r)
+            queue = []
+            for m, rs in by_model.items():
+                health = self.health[m]
+                if not health.available():
+                    report.skipped[m] = report.skipped.get(m, 0) + 1
+                    exc = CircuitOpenError(
+                        m, retry_after_s=health.retry_after_s())
+                    queue.extend(self._reroute(rs, exc, report, attempts,
+                                               tried))
+                    continue
+                reqs = [r.request for r in rs]
+                try:
+                    steps = self._run_engine(m, reqs)
+                except IncompleteDrainError as exc:
+                    # partial wave: finished requests stand; only the
+                    # survivors (already slot-released and error-marked by
+                    # the engine) fail over
+                    health.record_failure(exc)
+                    report.record_error(m, exc,
+                                        [q.uid for q in exc.survivors])
+                    surv = {id(q) for q in exc.survivors}
+                    failed_rs = [r for r in rs if id(r.request) in surv]
+                    queue.extend(self._reroute(failed_rs, exc, report,
+                                               attempts, tried))
+                except Exception as exc:
+                    health.record_failure(exc)
+                    report.record_error(m, exc, [r.uid for r in rs])
+                    if not isinstance(exc, EngineDeadlineExceeded):
+                        # reclaim any slots the failed wave admitted; a
+                        # deadline leaves them — the hung worker still owns
+                        # the engine state
+                        rel = getattr(self.engines[m], "release", None)
+                        if callable(rel):
+                            rel(reqs)
+                    queue.extend(self._reroute(rs, exc, report, attempts,
+                                               tried))
+                else:
+                    health.record_success()
+                    report[m] = report.get(m, 0) + steps
+            if queue and self.retry_backoff_s:
+                time.sleep(self.retry_backoff_s)
         self.log.extend(results)
-        return steps
+        return report
 
     def serve_texts(self, texts: Sequence[str], **kw):
         results = self.submit_texts(texts, **kw)

@@ -35,6 +35,7 @@ from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from .engine import Request, ServingEngine
+from .faults import DegradationLadder, Overloaded
 
 
 @dataclass
@@ -60,20 +61,39 @@ class MicroBatcher:
     ``maybe_flush()`` hold a partial wave open until either ``max_batch``
     requests are pending or the oldest has waited that long; with no
     timeout configured any pending request makes the wave ready, which is
-    the old always-flush behaviour.  ``clock`` is injectable for tests."""
+    the old always-flush behaviour.  ``clock`` is injectable for tests.
+
+    **Admission control** — ``max_pending`` bounds the queue: a ``submit``
+    past the bound raises a typed `Overloaded` carrying a retry-after hint
+    (estimated backlog drain time), never a silent drop; the queue recovers
+    as flushes drain it.  **Graceful degradation** — with a ``ladder``
+    configured, each flush picks a retrieval degradation level from queue
+    depth and deadline headroom (``deadline_s`` = per-request service-level
+    deadline measured from submit) and serves the wave at that level; every
+    result is annotated with it (`RoutedResult.degradation`).  With no
+    ladder the wave is always served at full fidelity — existing callers
+    see byte-identical behaviour."""
 
     def __init__(self, service, max_batch: int = 64,
                  max_new_tokens: int = 8,
                  close_timeout_s: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 max_pending: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 ladder: Optional[DegradationLadder] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.service = service
         self.max_batch = int(max_batch)
         self.max_new_tokens = int(max_new_tokens)
         self.close_timeout_s = (None if close_timeout_s is None
                                 else float(close_timeout_s))
         self.clock = clock
+        self.max_pending = None if max_pending is None else int(max_pending)
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
+        self.ladder = ladder
         # (ticket, text, lam, t_submit); tickets are monotonic and never
         # reused, so they survive partial flushes truncating the queue
         self._queue: Deque[Tuple[int, str, Optional[float], float]] = \
@@ -83,15 +103,20 @@ class MicroBatcher:
         self._closed = False
         self.flushes = 0          # dispatches actually issued
         self.routed = 0           # requests routed through them
+        self.shed = 0             # submissions rejected at the bound
+        self.degraded_waves = 0   # flushes served above ladder level 0
+        self.last_degradation = 0
 
     @classmethod
     def from_policy(cls, service, max_new_tokens: int = 8,
-                    clock: Callable[[], float] = time.monotonic
-                    ) -> "MicroBatcher":
+                    clock: Callable[[], float] = time.monotonic,
+                    **overrides) -> "MicroBatcher":
         """Build a batcher whose wave-close constants come from the
         service's fitted `DispatchPolicy` (measured batch-amortization
         knee + solo-dispatch p50).  Falls back to the static defaults when
-        no policy is fitted or the policy carries no wave constants."""
+        no policy is fitted or the policy carries no wave constants.
+        ``overrides`` (e.g. ``max_pending``, ``deadline_s``, ``ladder``)
+        pass through to the constructor and win over the policy."""
         pol = getattr(service, "dispatch_policy", None)
         kw = {}
         if pol is not None:
@@ -99,16 +124,34 @@ class MicroBatcher:
                 kw["max_batch"] = int(pol.wave_target_batch)
             if getattr(pol, "wave_close_timeout_s", 0.0):
                 kw["close_timeout_s"] = float(pol.wave_close_timeout_s)
+        kw.update(overrides)
         return cls(service, max_new_tokens=max_new_tokens, clock=clock, **kw)
 
     def pending(self) -> int:
         return len(self._queue)
 
+    def retry_after_s(self) -> float:
+        """Estimated time for the backlog to drain one wave — the hint a
+        shed submission carries so clients back off instead of hammering."""
+        per_wave = self.close_timeout_s if self.close_timeout_s else 0.01
+        waves = max(len(self._queue) / max(self.max_batch, 1), 1.0)
+        return per_wave * waves
+
     def submit(self, text: str, lam: Optional[float] = None) -> int:
         """Queue a request; returns its ticket (stable across flushes —
-        claim the result later with ``pop_result(ticket)``)."""
+        claim the result later with ``pop_result(ticket)``).  Past the
+        ``max_pending`` bound this sheds explicitly: a typed `Overloaded`
+        with a retry-after hint, never a silent drop."""
         if self._closed:
             raise RuntimeError("MicroBatcher is closed; no new submissions")
+        if (self.max_pending is not None
+                and len(self._queue) >= self.max_pending):
+            self.shed += 1
+            raise Overloaded(
+                f"queue full ({len(self._queue)}/{self.max_pending} "
+                f"pending); retry after ~{self.retry_after_s():.3f}s",
+                retry_after_s=self.retry_after_s(),
+                pending=len(self._queue))
         ticket = self._next_ticket
         self._next_ticket += 1
         self._queue.append((ticket, text, lam, self.clock()))
@@ -131,11 +174,27 @@ class MicroBatcher:
         else keep accumulating and return []."""
         return self.flush() if self.ready() else []
 
+    def _degradation_level(self) -> int:
+        """Ladder level for the wave about to flush, from queue depth and
+        the oldest request's deadline headroom.  0 (full fidelity) when no
+        ladder is configured — the default path is untouched."""
+        if self.ladder is None or not self._queue:
+            return 0
+        headroom = 1.0
+        if self.deadline_s:
+            waited = self.clock() - self._queue[0][3]
+            headroom = 1.0 - waited / self.deadline_s
+        return self.ladder.level_for(len(self._queue), self.max_batch,
+                                     headroom=headroom)
+
     def flush(self) -> List:
-        """Route the pending wave (up to ``max_batch``) in ONE dispatch."""
+        """Route the pending wave (up to ``max_batch``) in ONE dispatch,
+        served at the deadline-driven degradation level (annotated on every
+        result)."""
         if not self._queue:
             return []
         import numpy as np
+        level = self._degradation_level()
         wave = [self._queue.popleft()
                 for _ in range(min(self.max_batch, len(self._queue)))]
         tickets = [w[0] for w in wave]
@@ -143,12 +202,18 @@ class MicroBatcher:
         default = self.service.default_lam
         lam_vec = np.asarray([default if w[2] is None else float(w[2])
                               for w in wave], np.float32)
+        # only pass degrade= when the ladder engaged — level 0 keeps the
+        # call (and any stub service's signature) byte-identical to before
+        kw = {"degrade": level} if level else {}
         results = self.service.submit_texts(
-            texts, max_new_tokens=self.max_new_tokens, lam=lam_vec)
+            texts, max_new_tokens=self.max_new_tokens, lam=lam_vec, **kw)
         for t, res in zip(tickets, results):
             self._results[t] = res
         self.flushes += 1
         self.routed += len(results)
+        self.last_degradation = level
+        if level:
+            self.degraded_waves += 1
         return results
 
     def pop_result(self, ticket: int):

@@ -302,6 +302,76 @@ def test_r4_nested_jitted_def(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# R5 silent except in the serving tree
+# ---------------------------------------------------------------------------
+
+def test_r5_flags_bare_and_silent_except(tmp_path):
+    put(tmp_path, "repro/serving/mod.py", """
+        def drain(engine):
+            try:
+                engine.step()
+            except:
+                pass
+            return engine
+
+
+        def poll(engine):
+            try:
+                engine.step()
+            except ValueError:
+                x = None
+            return x
+    """)
+    active, _ = lint(tmp_path, rules=["R5"])
+    assert len(active) == 2
+    bare, silent = sorted(active, key=lambda f: f.line)
+    assert bare.line == 5 and "bare `except:`" in bare.message
+    assert silent.line == 13
+    assert "swallows the exception silently" in silent.message
+    assert "allow-swallow" in silent.message
+
+
+def test_r5_handlers_that_record_or_reraise_pass(tmp_path):
+    put(tmp_path, "repro/serving/mod.py", """
+        def wave(engine, health, box):
+            try:
+                engine.step()
+            except RuntimeError as exc:
+                health.record_failure(exc)
+            try:
+                engine.step()
+            except BaseException as exc:
+                box["exc"] = exc
+            try:
+                engine.step()
+            except ValueError:
+                raise
+    """)
+    active, _ = lint(tmp_path, rules=["R5"])
+    assert [f.render() for f in active] == []
+
+
+def test_r5_scope_and_pragma(tmp_path):
+    code = """
+        def poll(engine):
+            try:
+                engine.step()
+            except ValueError:  {pragma}
+                x = None
+            return x
+    """
+    put(tmp_path, "repro/core/mod.py", code.format(pragma=""))
+    put(tmp_path, "repro/serving/mod.py", code.format(pragma=""))
+    active, _ = lint(tmp_path, rules=["R5"])
+    # same handler in both trees: only the serving copy is in scope
+    assert [f.path for f in active] == ["repro/serving/mod.py"]
+    put(tmp_path, "repro/serving/mod.py", code.format(
+        pragma="# repro: allow-swallow: probe failure is the signal"))
+    active, suppressed = lint(tmp_path, rules=["R5"])
+    assert active == [] and suppressed == []  # justified pragma clears it
+
+
+# ---------------------------------------------------------------------------
 # baseline mechanics + the CLI gate
 # ---------------------------------------------------------------------------
 
