@@ -1,0 +1,249 @@
+"""Open-loop load benchmark for the streaming gateway.
+
+Traffic is offered to a LIVE gateway over real sockets at a fixed arrival
+rate regardless of completions (open-loop — the regime that actually
+exposes queueing collapse; a closed-loop client self-throttles and hides
+it).  Arrivals are Poisson by default and deterministic under ``--quick``
+so the CI leg is reproducible.  Every request is a streamed OpenAI chat
+completion; the client records TTFT (request start -> first content
+chunk) and the typed outcome.
+
+Per offered rate: completed / shed (429) / failed (502) / goodput,
+TTFT p50/p99, stream-total p50.  The sweep's summary is the goodput knee —
+the largest offered rate the gateway sustains at ``GOODPUT_FLOOR`` —
+mirroring the fused-dispatch amortization story at the HTTP layer.
+
+The contract checked here is the serving layer's standing one, **extended
+over the network**: never a silent drop.  Offered = completed + typed 429
++ typed 502 at every rate; a client-side exception (reset, short read,
+hang) counts against that identity and fails ``--check`` outright.
+
+``--check`` additionally asserts the declared TTFT p99 bound at the
+lowest offered rate (env ``REPRO_GATEWAY_TTFT_BOUND_S``, default 10s —
+generous because CI runs reduced-config engines on 1 CPU core).
+``--emit-bench PATH`` merges a ``gateway`` section into
+`BENCH_serving.json` (other sections untouched).
+
+Env knobs: REPRO_GW_RATES (comma req/s), REPRO_GW_N (requests per rate),
+REPRO_GW_MAX_TOKENS (stream length), REPRO_GATEWAY_TTFT_BOUND_S.
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.dataset import RoutingDataset
+from repro.core.routers.knn import KNNRouter
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.gateway import Gateway
+from repro.serving.router_service import RouterService
+
+from .common import RESULTS, write_csv
+
+MODELS = ["primary", "backup"]
+GOODPUT_FLOOR = 0.95
+DEFAULT_TTFT_BOUND_S = 10.0
+
+
+def _routing_ds(n=60, seed=0):
+    from repro.serving import encoder
+    texts = [f"topic {i % 3} example {i}" for i in range(n)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(seed)
+    scores = np.full((n, len(MODELS)), 0.3, np.float32)
+    scores[:, 0] = 0.9                      # lam=0 prefers "primary"
+    costs = rng.uniform(0.001, 0.01, (n, len(MODELS))).astype(np.float32)
+    return RoutingDataset("gw-load", emb, scores, costs, list(MODELS))
+
+
+def _fire(port, i, max_tokens, out):
+    """One open-loop client: stream a completion, record TTFT + outcome.
+    Any client-side exception is recorded as an untyped outcome — it
+    counts as a silent drop in the rate accounting."""
+    body = json.dumps({
+        "model": "repro/knn5", "stream": True, "max_tokens": max_tokens,
+        "messages": [{"role": "user",
+                      "content": f"topic {i % 3} load request {i}"}]})
+    t0 = time.perf_counter()
+    try:
+        c = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+        c.request("POST", "/v1/chat/completions", body=body,
+                  headers={"Content-Type": "application/json"})
+        r = c.getresponse()
+        if r.status != 200:
+            r.read()
+            c.close()
+            out[i] = {"status": r.status, "ttft": None, "total": None}
+            return
+        ttft, done = None, False
+        while True:
+            line = r.readline()
+            if not line:
+                break
+            line = line.strip()
+            if not line.startswith(b"data: "):
+                continue
+            payload = line[6:]
+            if payload == b"[DONE]":
+                done = True
+                break
+            if ttft is None:
+                chunk = json.loads(payload)
+                if chunk["choices"][0]["delta"].get("content"):
+                    ttft = time.perf_counter() - t0
+        c.close()
+        if not done:                         # stream cut short: not typed
+            out[i] = {"status": "short_stream", "ttft": ttft, "total": None}
+            return
+        out[i] = {"status": 200, "ttft": ttft,
+                  "total": time.perf_counter() - t0}
+    except Exception as exc:
+        out[i] = {"status": f"error:{type(exc).__name__}", "ttft": None,
+                  "total": None}
+
+
+def _offer_rate(port, rate, n, max_tokens, rng):
+    """Offer ``n`` requests at ``rate`` req/s: Poisson inter-arrivals from
+    ``rng``, deterministic ``1/rate`` spacing when ``rng`` is None."""
+    gaps = (rng.exponential(1.0 / rate, n) if rng is not None
+            else np.full(n, 1.0 / rate))
+    arrivals = np.cumsum(gaps) - gaps[0]
+    out, threads = {}, []
+    base = time.perf_counter()
+    for i in range(n):
+        lag = base + arrivals[i] - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        t = threading.Thread(target=_fire, args=(port, i, max_tokens, out),
+                             daemon=True)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(timeout=120)
+    completed = [o for o in out.values() if o["status"] == 200]
+    shed = sum(o["status"] == 429 for o in out.values())
+    failed = sum(o["status"] == 502 for o in out.values())
+    ttfts = [o["ttft"] for o in completed if o["ttft"] is not None]
+    totals = [o["total"] for o in completed]
+    return {
+        "rate": rate, "offered": n, "completed": len(completed),
+        "shed_429": shed, "failed_502": failed,
+        "silent_drops": n - len(completed) - shed - failed,
+        "goodput": round(len(completed) / n, 4),
+        "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 6)
+        if ttfts else None,
+        "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 6)
+        if ttfts else None,
+        "total_p50_s": round(float(np.percentile(totals, 50)), 6)
+        if totals else None,
+    }
+
+
+def run(seed: int = 0, emit: str | None = None, quick: bool = False,
+        check: bool = False):
+    rates_env = os.environ.get("REPRO_GW_RATES")
+    rates = ([float(r) for r in rates_env.split(",")] if rates_env
+             else ([4.0, 32.0] if quick else [2.0, 8.0, 32.0, 128.0]))
+    n = int(os.environ.get("REPRO_GW_N", 8 if quick else 24))
+    max_tokens = int(os.environ.get("REPRO_GW_MAX_TOKENS", 3))
+    # deterministic arrivals under --quick (reproducible CI timing);
+    # Poisson for the real sweep
+    rng = None if quick else np.random.default_rng(seed)
+
+    engines = {m: ServingEngine(reduced(get_config("qwen3-4b")),
+                                max_slots=4, cache_len=48, seed=i)
+               for i, m in enumerate(MODELS)}
+    for eng in engines.values():            # compile outside the timings
+        eng.run_until_drained([Request(
+            uid=-1, prompt_tokens=np.arange(4, dtype=np.int64)
+            % eng.cfg.vocab_size, max_new_tokens=1)])
+    router = KNNRouter(k=5).fit(_routing_ds(seed=seed))
+    svc = RouterService(router, engines, lam=0.0, engine_timeout_s=5.0)
+    gw = Gateway(svc, max_batch=8, close_timeout_s=0.01, max_pending=256,
+                 default_max_new_tokens=max_tokens)
+    rows_out = []
+    with gw:
+        _offer_rate(gw.port, 8.0, 4, max_tokens, None)   # warmup: route jit
+        for rate in rates:
+            row = _offer_rate(gw.port, rate, n, max_tokens, rng)
+            rows_out.append(row)
+            print(f"  gateway rate={rate:g}/s goodput={row['goodput']} "
+                  f"ttft_p50={row['ttft_p50_s']}s "
+                  f"ttft_p99={row['ttft_p99_s']}s "
+                  f"shed={row['shed_429']} failed={row['failed_502']} "
+                  f"drops={row['silent_drops']}")
+        stats_snapshot = gw.counters and {
+            k: int(v) for k, v in sorted(gw.counters.items())}
+
+    sustained = [r["rate"] for r in rows_out
+                 if r["goodput"] >= GOODPUT_FLOOR]
+    knee = max(sustained) if sustained else None
+    bound = float(os.environ.get("REPRO_GATEWAY_TTFT_BOUND_S",
+                                 DEFAULT_TTFT_BOUND_S))
+    out = {
+        "arrivals": "deterministic" if rng is None else "poisson",
+        "requests_per_rate": n, "max_tokens": max_tokens,
+        "goodput_floor": GOODPUT_FLOOR, "goodput_knee_rate": knee,
+        "declared_ttft_p99_bound_s": bound,
+        "rates": rows_out,
+        "gateway_counters": stats_snapshot,
+    }
+
+    header = ["rate", "offered", "completed", "shed_429", "failed_502",
+              "silent_drops", "goodput", "ttft_p50_s", "ttft_p99_s",
+              "total_p50_s"]
+    write_csv(RESULTS / "gateway_load.csv", header,
+              [[r[h] for h in header] for r in rows_out])
+    print(f"  gateway knee: {knee} req/s sustained at "
+          f"goodput >= {GOODPUT_FLOOR}")
+
+    if emit:
+        merged = {}
+        if os.path.exists(emit):
+            with open(emit) as f:
+                merged = json.load(f)
+        merged["gateway"] = out
+        with open(emit, "w") as f:
+            json.dump(merged, f, indent=2)
+            f.write("\n")
+        print(f"  [bench] {emit} (gateway section)")
+
+    if check:
+        for r in rows_out:
+            assert r["silent_drops"] == 0, (
+                f"rate {r['rate']}: {r['silent_drops']} silent drops — "
+                f"offered != completed + typed 429 + typed 502")
+        lowest = rows_out[0]
+        assert lowest["goodput"] == 1.0, (
+            f"lowest rate {lowest['rate']}/s did not fully complete: "
+            f"{lowest}")
+        assert lowest["ttft_p99_s"] <= bound, (
+            f"TTFT p99 {lowest['ttft_p99_s']}s at rate {lowest['rate']}/s "
+            f"exceeds the declared bound {bound}s")
+        assert knee is not None, f"no offered rate sustained: {rows_out}"
+        print(f"  gateway --check: zero silent drops at every rate, "
+              f"TTFT p99 {lowest['ttft_p99_s']}s <= {bound}s OK")
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 deterministic-arrival rates (CI shapes)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert zero silent drops and the declared TTFT "
+                         "p99 bound at the lowest rate")
+    ap.add_argument("--emit-bench", default=None, metavar="PATH",
+                    help="merge a gateway section into e.g. "
+                         "BENCH_serving.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(seed=args.seed, emit=args.emit_bench, quick=args.quick,
+        check=args.check)

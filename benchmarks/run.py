@@ -35,7 +35,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bandit_online, fault_recovery, fig1_locality,
-                   intrinsic_dim, ivf_recall, seed_stability,
+                   gateway_load, intrinsic_dim, ivf_recall, seed_stability,
                    serving_latency, table2_text_auc, table3_latency,
                    table4_ood, table5_vlm_auc, tableD_selection,
                    tableF_scaling, tableI_embeddings,
@@ -46,11 +46,12 @@ def main() -> None:
     quick_default = ["fig1", "intrinsic", "tableF", "seeds", "table3"]
     full_suite = quick_default + ["table4", "table5", "tableD", "tableI",
                                   "seeds", "bandit", "ivf", "serving",
-                                  "faults"]
+                                  "faults", "gateway"]
     jobs = {
         "ivf": ivf_recall.run,
         "serving": serving_latency.run,
         "faults": fault_recovery.run,
+        "gateway": gateway_load.run,
         "table2": table2_text_auc.run,
         "table3": table3_latency.run,
         "table4": table4_ood.run,

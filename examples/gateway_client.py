@@ -1,0 +1,103 @@
+"""Minimal stdlib client for the streaming routing gateway.
+
+Boot the gateway in one terminal::
+
+    PYTHONPATH=src python -m repro.serving.gateway --port 8800
+
+then run this client against it::
+
+    python examples/gateway_client.py --port 8800 --lam 0.35
+
+It streams one chat completion — the per-request cost/quality threshold
+rides in the MODEL NAME (``repro/<spec>@lam=...``), RouteLLM-style — then
+polls ``/stats`` for the service health + TTFT aggregates.  Only stdlib
+(`http.client`, `json`): anything that speaks OpenAI chat completions
+works the same way.
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+
+
+def discover_model(port: int, host: str) -> str:
+    """The gateway serves exactly one routable model name: its router."""
+    c = http.client.HTTPConnection(host, port, timeout=10)
+    c.request("GET", "/v1/models")
+    payload = json.loads(c.getresponse().read())
+    c.close()
+    return payload["data"][0]["id"]
+
+
+def stream_completion(port: int, host: str, model: str, prompt: str,
+                      max_tokens: int) -> None:
+    body = json.dumps({
+        "model": model, "stream": True, "max_tokens": max_tokens,
+        "messages": [{"role": "user", "content": prompt}]})
+    c = http.client.HTTPConnection(host, port, timeout=120)
+    c.request("POST", "/v1/chat/completions", body=body,
+              headers={"Content-Type": "application/json"})
+    r = c.getresponse()
+    if r.status != 200:
+        print(f"[{r.status}] {r.read().decode()}")
+        c.close()
+        return
+    print(f"routed to: {r.getheader('X-Repro-Served-By')}")
+    print("stream:   ", end="", flush=True)
+    while True:
+        line = r.readline()
+        if not line:
+            break
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        payload = line[6:]
+        if payload == b"[DONE]":
+            break
+        chunk = json.loads(payload)
+        choice = chunk["choices"][0]
+        print(choice["delta"].get("content", ""), end="", flush=True)
+        if choice["finish_reason"] == "stop":
+            timing = chunk.get("repro", {}).get("timing", {})
+            print(f"\nfinish:    served_by={chunk['repro']['served_by']} "
+                  f"ttft={timing.get('first_token_s')}s "
+                  f"total={timing.get('total_s')}s")
+    c.close()
+
+
+def poll_stats(port: int, host: str) -> None:
+    c = http.client.HTTPConnection(host, port, timeout=10)
+    c.request("GET", "/stats")
+    st = json.loads(c.getresponse().read())
+    c.close()
+    g = st["gateway"]
+    print(f"/stats:    requests={g['requests']} "
+          f"streams={g.get('streams', 0)} "
+          f"ttft_p50={g['ttft_p50_s']}s ttft_p99={g['ttft_p99_s']}s")
+    for name, eng in st["service"]["engines"].items():
+        print(f"           engine {name}: breaker={eng['state']}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8800)
+    ap.add_argument("--lam", type=float, default=None,
+                    help="per-request cost threshold, appended to the "
+                         "model name as '@lam=...'")
+    ap.add_argument("--prompt", default="algebra proofs question")
+    ap.add_argument("--max-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    model = discover_model(args.port, args.host)
+    if args.lam is not None:
+        model = f"{model}@lam={args.lam}"
+    print(f"model:     {model}")
+    stream_completion(args.port, args.host, model, args.prompt,
+                      args.max_tokens)
+    poll_stats(args.port, args.host)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""CI smoke for the streaming gateway: boot a demo pool on an ephemeral
+port, hit /health, stream one completion end to end, poll /stats, and
+assert a clean shutdown (both gateway threads joined, port dark).
+
+    PYTHONPATH=src python scripts/gateway_smoke.py
+
+Exits non-zero on any failed check.  This is the network-level tripwire
+in front of the full socket suite (tests/test_gateway.py): it proves a
+fresh checkout can boot the whole serving stack — engines, router fit,
+fused routing, SSE — with no fixtures.
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import socket
+import sys
+
+
+def main() -> int:
+    from repro.serving.gateway import demo_gateway
+
+    gw = demo_gateway(pool=("qwen3-4b", "mamba2-370m"), router="knn10",
+                      n_support=60, max_slots=2)
+    with gw:
+        port = gw.port
+        print(f"[smoke] gateway up on 127.0.0.1:{port} "
+              f"serving {gw.model_name}")
+
+        c = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+        c.request("GET", "/health")
+        r = c.getresponse()
+        health = json.loads(r.read())
+        c.close()
+        assert r.status == 200, f"/health {r.status}: {health}"
+        assert health["status"] == "ok", health
+        print(f"[smoke] /health ok: {health['available']}")
+
+        body = json.dumps({
+            "model": gw.model_name + "@lam=0.5", "stream": True,
+            "max_tokens": 4,
+            "messages": [{"role": "user",
+                          "content": "world history question"}]})
+        c = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+        c.request("POST", "/v1/chat/completions", body=body)
+        r = c.getresponse()
+        assert r.status == 200, f"completion {r.status}: {r.read()!r}"
+        served = r.getheader("X-Repro-Served-By")
+        frames = []
+        while True:
+            line = r.readline()
+            if not line:
+                break
+            line = line.strip()
+            if line.startswith(b"data: "):
+                frames.append(line[6:])
+                if frames[-1] == b"[DONE]":
+                    break
+        c.close()
+        assert frames[-1] == b"[DONE]", frames
+        chunks = [json.loads(f) for f in frames[:-1]]
+        content = [c["choices"][0]["delta"].get("content", "")
+                   for c in chunks]
+        assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+        assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+        assert sum(bool(t.strip()) for t in content) == 4, content
+        print(f"[smoke] streamed 4 chunks from {served}: "
+              f"{''.join(content).strip()!r}")
+
+        c = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+        c.request("GET", "/stats")
+        r = c.getresponse()
+        stats = json.loads(r.read())
+        c.close()
+        assert r.status == 200
+        assert stats["gateway"]["streams"] >= 1, stats["gateway"]
+        print(f"[smoke] /stats ok: ttft_p50={stats['gateway']['ttft_p50_s']}s")
+
+    assert not gw._pump_thread.is_alive(), "pump thread survived close()"
+    assert not gw._http_thread.is_alive(), "http thread survived close()"
+    try:
+        socket.create_connection(("127.0.0.1", port), timeout=2)
+    except OSError:
+        pass
+    else:
+        raise AssertionError(f"port {port} still accepting after close()")
+    print("[smoke] clean shutdown: threads joined, port dark")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,2 +1,2 @@
-from . import (encoder, engine, faults, pipeline,  # noqa: F401
-               router_service, scheduler)
+from . import (encoder, engine, faults, gateway,  # noqa: F401
+               pipeline, router_service, scheduler)

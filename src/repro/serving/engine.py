@@ -12,6 +12,7 @@ would be the production path and is noted in DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -20,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -37,6 +40,15 @@ class Request:
     #: no longer be served (drain truncation, no available engine); a
     #: request always ends done, errored, or still owned by a live queue
     error: Optional[str] = None
+    #: token-streaming hook: called with each decoded token id the moment
+    #: the decode wave materializes it (same thread as the decode loop) —
+    #: how a streaming front end (the gateway's SSE writer) observes
+    #: first-token / per-token progress without polling `output_tokens`
+    on_token: Optional[Callable[[int], None]] = None
+    #: cooperative cancellation: set by the owner (e.g. a gateway handler
+    #: whose client disconnected mid-stream); the engine frees the slot at
+    #: the next decode wave and marks the request ``error="cancelled"``
+    cancelled: bool = False
 
 
 class IncompleteDrainError(RuntimeError):
@@ -104,6 +116,14 @@ class ServingEngine:
 
     # ---- decode wave over all active slots ----
     def step(self):
+        # cancelled requests free their slots BEFORE the decode dispatch —
+        # a disconnected client must not keep paying for tokens
+        for s, r in enumerate(self.slot_req):
+            if r is not None and r.cancelled:
+                r.error = "cancelled"
+                r.t_finish = time.time()
+                self.slot_req[s] = None
+                self.pos[s] = -1
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
@@ -125,6 +145,16 @@ class ServingEngine:
             r.output_tokens.append(nxt)
             self.stats["tokens_out"] += 1
             self.pos[s] += 1
+            if r.on_token is not None:
+                try:
+                    r.on_token(nxt)
+                except Exception:
+                    # a streaming consumer raising (client gone, queue torn
+                    # down) must not fail the whole decode wave — the other
+                    # slots' requests are unrelated traffic
+                    _log.exception("on_token callback failed (uid=%s)",
+                                   r.uid)
+                    r.on_token = None
             if (len(r.output_tokens) >= r.max_new_tokens
                     or self.pos[s] >= self.cache_len - 1):
                 r.done = True
@@ -171,7 +201,12 @@ class ServingEngine:
                     f"uids={[r.uid for r in survivors]}",
                     survivors=survivors, steps=steps)
             while pending and self.has_free_slot():
-                self.admit(pending.pop(0))
+                req = pending.pop(0)
+                if req.cancelled:           # never admitted: no slot to free
+                    req.error = "cancelled"
+                    req.t_finish = time.time()
+                    continue
+                self.admit(req)
             self.step()
             steps += 1
         return steps

@@ -80,6 +80,33 @@ class RoutedResult:
     rerouted_from: List[str] = dataclasses.field(default_factory=list)
 
 
+def to_jsonable(obj):
+    """Recursively convert a stats/report payload into plain JSON types.
+    Numpy scalars and 0-d/1-d arrays leak easily out of routing internals
+    (``support_size``, measured latencies, mask counters); everything the
+    gateway serializes onto the wire goes through here so ``json.dumps``
+    can never raise on a live health endpoint."""
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [to_jsonable(v) for v in obj.tolist()]
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, (bool, int, str)) or obj is None:
+        return obj
+    if isinstance(obj, float):
+        # json.dumps emits bare `NaN`/`Infinity`, which is not JSON and
+        # breaks strict clients — clamp to null
+        return obj if np.isfinite(obj) else None
+    return str(obj)
+
+
 def _route_batch(s_hat, c_hat, lam, avail):
     """Single batched utility path: per-request lambda, availability-masked
     argmax over models.  Delegates to the SAME jitted kernel the routers'
@@ -206,15 +233,26 @@ class RouterService:
         return np.asarray(flags, bool)
 
     def stats(self) -> Dict:
-        """JSON-ready service health snapshot — the payload a gateway
-        ``/health`` endpoint will serve: per-engine breaker state plus
-        service counters."""
-        return {
+        """JSON-ready service health snapshot — the payload the gateway's
+        ``/health`` and ``/stats`` endpoints serve verbatim: per-engine
+        breaker state plus service counters.  Passed through `to_jsonable`
+        end-to-end so no numpy scalar/array from the routing internals can
+        ever make ``json.dumps`` raise on a live health check
+        (regression-tested: ``json.dumps(svc.stats())`` must round-trip)."""
+        support = getattr(self.router, "support_size", None)
+        return to_jsonable({
             "spec": self.spec,
+            "retrieval_backend": self.retrieval_backend,
+            "default_lam": self.default_lam,
             "engines": {m: self.health[m].stats() for m in self.model_names},
+            # side-effect-free availability view: a stats poll must not
+            # perform the open -> half_open probe transition itself
+            "available": {m: self.health[m].retry_after_s() == 0.0
+                          for m in self.model_names},
             "observed": self.observed,
             "routed": len(self.log),
-        }
+            "support_size": support,
+        })
 
     # ---- lifecycle ----
     def close(self) -> None:

@@ -221,6 +221,21 @@ class MicroBatcher:
         None while its wave is still pending."""
         return self._results.pop(ticket, None)
 
+    def cancel(self, ticket: int) -> bool:
+        """Withdraw a ticket: a still-queued submission leaves the queue
+        (freeing its ``max_pending`` admission slot immediately — a client
+        that hung up must not hold capacity), and an already-routed,
+        unclaimed result is forgotten.  Returns True when the ticket was
+        still queued (its text will never be routed); False once its wave
+        has flushed — the caller then owns cancelling the in-flight
+        `Request` (``request.cancelled``) instead."""
+        for i, entry in enumerate(self._queue):
+            if entry[0] == ticket:
+                del self._queue[i]
+                return True
+        self._results.pop(ticket, None)
+        return False
+
     def close(self) -> None:
         """Drain: flush every still-pending wave so ALL outstanding tickets
         resolve, then refuse new submissions.  Idempotent.  Unclaimed

@@ -88,6 +88,25 @@ def test_router_service_end_to_end(service):
     assert all(r.confidence is not None for r in results)
 
 
+def test_stats_json_serializable_end_to_end(service):
+    """Regression: `stats()` is the /health /stats payload — it must
+    survive ``json.dumps`` with no numpy scalars/arrays leaking from the
+    routing internals, even after traffic has updated every counter."""
+    import json
+
+    service.serve_texts(["topic 2 question"], max_new_tokens=2)
+    st = service.stats()
+    payload = json.dumps(st)                  # raises on any numpy leak
+    back = json.loads(payload)
+    assert back == st                         # pure-JSON types end to end
+    assert back["spec"] == service.spec
+    assert set(back["available"]) == set(service.model_names)
+    assert all(isinstance(v, bool) for v in back["available"].values())
+    assert back["routed"] >= 1
+    for m, eng in back["engines"].items():
+        assert eng["state"] in ("closed", "open", "half_open")
+
+
 def _routing_ds(names, n=60, seed=0):
     """Tiny routing dataset whose model axis matches ``names``."""
     texts = [f"topic {i % 3} example {i}" for i in range(n)]
