@@ -27,6 +27,15 @@ breaker CLOSED again (goodput 1.0) after recovery.  ``--emit-bench PATH``
 merges a ``fault_recovery`` section into `BENCH_serving.json` (the rest of
 the file — serving_latency's grid — is left untouched).
 
+The ``durability`` leg (``--leg durability``, both under ``all``) measures
+the crash-safety tax on the SAME observe() path production feedback rides:
+feedback-ingest throughput with the write-ahead log on (fsync per batch)
+vs off, and cold-start recovery time (checkpoint load + WAL-suffix replay)
+as a function of WAL length — asserting, always, that the recovered router
+serves BITWISE-identical predictions to the uncrashed one.  ``--check``
+additionally bounds recovery time by
+``RECOVERY_BASE_S + RECOVERY_PER_BATCH_S * batches``.
+
 Env knobs: REPRO_FAULT_WAVES (waves per phase, default 6; 4 under
 --quick), REPRO_FAULT_WAVE_N (requests per wave, 4).
 """
@@ -35,6 +44,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -216,15 +227,163 @@ def run(seed: int = 0, emit: str | None = None, quick: bool = False,
     return rows
 
 
+#: declared recovery-time bound: checkpoint load + per-batch replay cost
+RECOVERY_BASE_S = 5.0
+RECOVERY_PER_BATCH_S = 0.25
+
+
+def _durable_service(root, ds, *, fsync=True, checkpoint_every=1_000_000):
+    from repro.serving.durability import DurabilityManager
+    router = KNNRouter(k=5, index="ivf", n_clusters=4, online=True,
+                       delta_cap=1_000_000).fit(ds)
+    dur = DurabilityManager(root, checkpoint_every=checkpoint_every,
+                            fsync=fsync)
+    return RouterService(router, {m: None for m in MODELS}, lam=0.0,
+                         durability=dur)
+
+
+def _feedback_stream(ds, n_batches, batch_n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [(rng.normal(size=(batch_n, ds.dim)).astype(np.float32),
+             rng.uniform(0.2, 1.0, (batch_n, len(MODELS))).astype(np.float32),
+             rng.uniform(0.001, 0.01,
+                         (batch_n, len(MODELS))).astype(np.float32))
+            for _ in range(n_batches)]
+
+
+def _observe_throughput(ds, batches, root):
+    """Rows/s through observe() with the WAL fsync'ing vs no durability."""
+    out = {}
+    for mode in ("wal_fsync", "off"):
+        if mode == "off":
+            router = KNNRouter(k=5, index="ivf", n_clusters=4, online=True,
+                               delta_cap=1_000_000).fit(ds)
+            svc = RouterService(router, {m: None for m in MODELS}, lam=0.0)
+        else:
+            svc = _durable_service(root / "throughput", ds)
+        svc.observe(*batches[0])            # jit/append warmup, untimed
+        t0 = time.perf_counter()
+        for b in batches[1:]:
+            svc.observe(*b)
+        dt = time.perf_counter() - t0
+        rows = sum(len(b[0]) for b in batches[1:])
+        out[mode] = {"batches": len(batches) - 1, "rows": rows,
+                     "elapsed_s": round(dt, 6),
+                     "rows_per_s": round(rows / dt, 1)}
+    out["overhead_x"] = round(out["off"]["rows_per_s"]
+                              / max(out["wal_fsync"]["rows_per_s"], 1e-9), 3)
+    return out
+
+
+def _recovery_sweep(ds, lengths, batch_n, root):
+    """Cold-start recovery time vs WAL length, with the zero-loss identity
+    assert: the recovered router's predictions are bitwise-equal to the
+    uncrashed process's on the full feedback stream."""
+    probe = np.random.default_rng(99).normal(
+        size=(16, ds.dim)).astype(np.float32)
+    rows = []
+    for n in lengths:
+        state = root / f"recover-{n}"
+        svc = _durable_service(state, ds)
+        for b in _feedback_stream(ds, n, batch_n, seed=2):
+            svc.observe(*b)
+        s_ref, c_ref = svc.router.predict_utility(probe)
+        support_ref = svc.router.support_size
+        svc.durability.close()              # no final checkpoint: worst case
+
+        t0 = time.perf_counter()
+        svc2 = RouterService.recover(state, {m: None for m in MODELS},
+                                     lam=0.0)
+        recovery_s = time.perf_counter() - t0
+        rec = svc2.recovery_status()
+        assert rec["replayed_batches"] == n, rec      # bootstrap covers none
+        assert svc2.router.support_size == support_ref
+        s2, c2 = svc2.router.predict_utility(probe)
+        identical = bool(
+            np.array_equal(np.asarray(s_ref), np.asarray(s2))
+            and np.array_equal(np.asarray(c_ref), np.asarray(c2)))
+        assert identical, f"recovered predictions diverged at WAL length {n}"
+        svc2.durability.close()
+        rows.append({"wal_batches": n, "replayed_rows": rec["replayed_rows"],
+                     "recovery_s": round(recovery_s, 6),
+                     "bitwise_identical": identical,
+                     "declared_bound_s": round(
+                         RECOVERY_BASE_S + RECOVERY_PER_BATCH_S * n, 3)})
+    return rows
+
+
+def run_durability(seed: int = 0, emit: str | None = None,
+                   quick: bool = False, check: bool = False):
+    ds = _routing_ds(seed=seed)
+    batch_n = 8
+    n_throughput = 16 if quick else 48
+    lengths = (8, 24) if quick else (16, 64)
+    root_s = tempfile.mkdtemp(prefix="repro-durability-bench-")
+    from pathlib import Path
+    root = Path(root_s)
+    try:
+        throughput = _observe_throughput(
+            ds, _feedback_stream(ds, n_throughput, batch_n), root)
+        recovery = _recovery_sweep(ds, lengths, batch_n, root)
+    finally:
+        shutil.rmtree(root_s, ignore_errors=True)
+    out = {"batch_n": batch_n, "observe_throughput": throughput,
+           "recovery": recovery}
+
+    write_csv(RESULTS / "durability_recovery.csv",
+              ["wal_batches", "replayed_rows", "recovery_s",
+               "bitwise_identical", "declared_bound_s"],
+              [[r[k] for k in ("wal_batches", "replayed_rows", "recovery_s",
+                               "bitwise_identical", "declared_bound_s")]
+               for r in recovery])
+    t = throughput
+    print(f"  durability observe: wal+fsync={t['wal_fsync']['rows_per_s']}"
+          f" rows/s  off={t['off']['rows_per_s']} rows/s "
+          f"(overhead {t['overhead_x']}x)")
+    for r in recovery:
+        print(f"  durability recover: wal={r['wal_batches']} batches "
+              f"({r['replayed_rows']} rows) in {r['recovery_s']*1e3:.0f}ms "
+              f"bitwise_identical={r['bitwise_identical']}")
+
+    if emit:
+        merged = {}
+        if os.path.exists(emit):
+            with open(emit) as f:
+                merged = json.load(f)
+        merged["durability"] = out
+        with open(emit, "w") as f:
+            json.dump(merged, f, indent=2)
+            f.write("\n")
+        print(f"  [bench] {emit} (durability section)")
+
+    if check:
+        for r in recovery:
+            assert r["bitwise_identical"], r
+            assert r["recovery_s"] <= r["declared_bound_s"], (
+                f"recovery of {r['wal_batches']} WAL batches took "
+                f"{r['recovery_s']}s, declared bound "
+                f"{r['declared_bound_s']}s")
+        print("  durability --check: zero-loss bitwise identity, recovery "
+              "time within the declared bound OK")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer waves (CI shapes)")
     ap.add_argument("--check", action="store_true",
                     help="assert zero silent drops, the declared outage "
-                         "p99 bound, and breaker recovery")
+                         "p99 bound, breaker recovery, and the durability "
+                         "leg's recovery-time/zero-loss bounds")
     ap.add_argument("--emit-bench", default=None, metavar="PATH",
-                    help="merge a fault_recovery section into e.g. "
-                         "BENCH_serving.json")
+                    help="merge fault_recovery / durability sections into "
+                         "e.g. BENCH_serving.json")
+    ap.add_argument("--leg", choices=("faults", "durability", "all"),
+                    default="all", help="which benchmark leg(s) to run")
     args = ap.parse_args()
-    run(emit=args.emit_bench, quick=args.quick, check=args.check)
+    if args.leg in ("faults", "all"):
+        run(emit=args.emit_bench, quick=args.quick, check=args.check)
+    if args.leg in ("durability", "all"):
+        run_durability(emit=args.emit_bench, quick=args.quick,
+                       check=args.check)

@@ -1,0 +1,168 @@
+"""Kill-injection harness child: one crashed-or-clean serving process.
+
+The durability suite (tests/test_durability.py) forks this script twice
+per scenario:
+
+  1. ``--mode fresh`` with ``REPRO_KILL_AT=<barrier>`` armed — boots a
+     durable RouterService over a deterministic tiny corpus, streams
+     observe() batches, and prints a flushed ``ACK seq=<n>`` line after
+     every acknowledged batch until the armed barrier SIGKILLs it (exit
+     code -9).  Everything is derived from ``--seed``: batch i is the
+     same bytes in every process, so the parent can later reproduce the
+     exact acknowledged prefix.
+  2. ``--mode recover`` (unarmed) in the same ``--root`` — recovers via
+     checkpoint + WAL replay and prints the recovered state: support
+     size, applied sequence, a retrieval fingerprint, and a probe check
+     that the LAST acknowledged batch's hot row is actually retrieved.
+
+The parent then runs a third, uncrashed ``--mode fresh`` reference with
+``--batches`` set to the crashed run's acknowledged count and asserts the
+fingerprints are IDENTICAL — recovery must converge to the same bytes as
+a process that never died.  No sleeps anywhere: barriers fire at exact
+instructions (see repro.persist), so every scenario is deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+MODELS = ["model-a", "model-b"]
+#: hot-row judged score: retrieval of the row lifts the probe's predicted
+#: score far above anything the base corpus (scores <= 1.0) can produce
+HOT_SCORE = 9.0
+
+
+def make_dataset(seed: int):
+    from repro.core.dataset import RoutingDataset
+    from repro.serving import encoder
+    texts = [f"topic {i % 3} example {i}" for i in range(40)]
+    emb = encoder.embed_texts(texts)
+    rng = np.random.default_rng(seed)
+    n, M = len(texts), len(MODELS)
+    return RoutingDataset(
+        "kill-mini", emb,
+        rng.uniform(0.2, 1.0, (n, M)).astype(np.float32),
+        rng.uniform(0.001, 0.01, (n, M)).astype(np.float32),
+        list(MODELS))
+
+
+def make_batch(seed: int, i: int, batch_size: int, dim: int):
+    """Observation batch i — identical bytes in every process.  Row 0 is
+    the "hot" row: judged HOT_SCORE everywhere, so retrieving it is
+    observable through predict_utility."""
+    rng = np.random.default_rng(seed * 100003 + i)
+    emb = rng.normal(size=(batch_size, dim)).astype(np.float32)
+    S = rng.uniform(0.2, 1.0, (batch_size, len(MODELS))).astype(np.float32)
+    S[0, :] = HOT_SCORE
+    C = rng.uniform(0.001, 0.01, S.shape).astype(np.float32)
+    return emb, S, C
+
+
+def fingerprint(router, seed: int, n_batches: int, batch_size: int,
+                dim: int) -> str:
+    """sha256 over predict_utility bytes on every applied batch embedding
+    plus a fixed probe set — bitwise retrieval identity, not just counts."""
+    probes = [np.random.default_rng(987).normal(
+        size=(8, dim)).astype(np.float32)]
+    for i in range(n_batches):
+        probes.append(make_batch(seed, i, batch_size, dim)[0])
+    X = np.concatenate(probes, axis=0)
+    s, c = router.predict_utility(X)
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(np.asarray(s, np.float32)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(c, np.float32)).tobytes())
+    return h.hexdigest()
+
+
+def probe_hot_row(router, seed: int, applied_seq: int, batch_size: int,
+                  dim: int) -> float:
+    """Predicted score when querying the LAST acknowledged batch's hot row:
+    > 1.5 iff the observed feedback row is retrieved (base corpus scores
+    cap at 1.0, so k=4 uniform averaging cannot cross 1.5 without it)."""
+    emb, _, _ = make_batch(seed, applied_seq, batch_size, dim)
+    s, _ = router.predict_utility(emb[:1])
+    return float(np.max(np.asarray(s)))
+
+
+def build_service(root: str, args):
+    from repro.core.routers.knn import KNNRouter
+    from repro.serving.durability import DurabilityManager
+    from repro.serving.router_service import RouterService
+    ds = make_dataset(args.seed)
+    router = KNNRouter(k=4, index="ivf", n_clusters=4, nprobe=4,
+                       online=True, delta_cap=args.delta_cap).fit(
+                           ds, seed=args.seed)
+    dur = DurabilityManager(root, checkpoint_every=args.checkpoint_every)
+    engines = {m: None for m in MODELS}
+    return RouterService(router, engines, durability=dur), ds.dim
+
+
+def say(line: str) -> None:
+    print(line, flush=True)      # flushed: must survive a SIGKILL right after
+
+
+def run_fresh(args) -> int:
+    svc, dim = build_service(args.root, args)
+    say(f"BOOT support={svc.router.support_size}")
+    for i in range(args.batches):
+        emb, S, C = make_batch(args.seed, i, args.batch_size, dim)
+        svc.observe(emb, S, C, recluster=args.recluster)
+        # an ACK line is only ever printed AFTER observe returned, i.e.
+        # after the WAL fsync — the parent treats every printed seq as
+        # durable and asserts recovery retains it
+        say(f"ACK seq={i} support={svc.router.support_size}")
+    svc.close()                  # joins a background compaction, if any
+    applied = args.batches
+    say(f"FINGERPRINT {fingerprint(svc.router, args.seed, applied, args.batch_size, dim)}")
+    say(f"PROBE {probe_hot_row(svc.router, args.seed, applied - 1, args.batch_size, dim):.3f}")
+    say("DONE")
+    return 0
+
+
+def run_recover(args) -> int:
+    from repro.serving.router_service import RouterService
+    engines = {m: None for m in MODELS}
+    svc = RouterService.open_recovery(args.root, engines)
+    rec = svc.recovery_status()
+    say(f"RECOVERY covered={rec['checkpoint_covered_seq']} "
+        f"pending={rec['pending_batches']} "
+        f"skipped={rec['corrupt_checkpoints_skipped']} "
+        f"torn={rec['wal_torn_tail_dropped']}")
+    svc.complete_recovery(recluster="auto")
+    applied = svc.durability.applied_seq + 1
+    dim = int(svc.router._X.shape[1])
+    say(f"RECOVERED applied={applied} support={svc.router.support_size}")
+    say(f"FINGERPRINT {fingerprint(svc.router, args.seed, applied, args.batch_size, dim)}")
+    if applied > 0:
+        say(f"PROBE {probe_hot_row(svc.router, args.seed, applied - 1, args.batch_size, dim):.3f}")
+    say("DONE")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", required=True, help="durability root dir")
+    ap.add_argument("--mode", choices=("fresh", "recover"), required=True)
+    ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--recluster", default="auto",
+                    help='"auto" (deterministic, fingerprint-comparable) '
+                         'or "background" (exercises the compaction-thread '
+                         'barriers)')
+    ap.add_argument("--delta-cap", type=int, default=10)
+    ap.add_argument("--checkpoint-every", type=int, default=2)
+    args = ap.parse_args(argv)
+    if args.recluster in ("0", "false", "False"):
+        args.recluster = False
+    return (run_fresh if args.mode == "fresh" else run_recover)(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""CI lint gate: run the repro.analysis rules (R1–R5) over src/, fail on
+"""CI lint gate: run the repro.analysis rules (R1–R6) over src/, fail on
 any non-baselined finding, then hand the generic-Python tier to ruff when
 it is installed (CI installs it; the container may not have it).
 

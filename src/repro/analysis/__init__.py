@@ -5,11 +5,13 @@ lock-guarded online index, a versioned artifact schema, stable jit caches —
 are invariants, not behaviors a unit test can pin once and forget.  This
 package machine-checks them:
 
-  * `lint` + `rules/` — an AST lint engine with four project rules:
+  * `lint` + `rules/` — an AST lint engine with six project rules:
     R1 no host sync reachable from the fused serving roots,
     R2 lock discipline on `DynamicIVFIndex` mutable state,
     R3 artifact-schema drift requires a `FORMAT_VERSION` bump,
-    R4 jit-cache hygiene (no instance-state closures, static args declared).
+    R4 jit-cache hygiene (no instance-state closures, static args declared),
+    R5 no bare/silent ``except`` in the serving tree,
+    R6 artifact/WAL writes go through `repro.persist`'s atomic helpers.
   * `sanitizers` — runtime counterparts wired into pytest fixtures: a
     transfer-guard context, a retrace counter, and a deadlock watchdog.
 

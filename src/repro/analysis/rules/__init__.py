@@ -1,6 +1,7 @@
 """Rule registry.  Each rule is ``run(project, config) -> List[Finding]``;
 the engine applies pragmas and the baseline afterwards."""
-from . import host_sync, jit_cache, lock_discipline, schema_pin, swallow
+from . import (durable_write, host_sync, jit_cache, lock_discipline,
+               schema_pin, swallow)
 
 ALL_RULES = {
     "R1": host_sync.run,
@@ -8,6 +9,7 @@ ALL_RULES = {
     "R3": schema_pin.run,
     "R4": jit_cache.run,
     "R5": swallow.run,
+    "R6": durable_write.run,
 }
 
 __all__ = ["ALL_RULES"]

@@ -1,0 +1,122 @@
+"""R6 — artifact and WAL writes go through the atomic helper.
+
+Durability's whole contract (``repro.persist``) is temp file → flush →
+fsync → ``os.replace`` → directory fsync.  A bare ``open(final, "w")``
+or ``np.savez(final_path)`` anywhere in the library tree can leave a
+torn file at the *final* name after a crash, which recovery then loads
+as a corrupt checkpoint/manifest — exactly the failure class the WAL and
+checkpoint store exist to rule out.  Flagged, in modules under the
+library scope (``repro/`` by default, ``repro/persist.py`` itself
+exempt since it is the helper):
+
+  * ``open(..., mode)`` where the mode string writes (``w``/``a``/``x``
+    or ``+``), including keyword ``mode=``;
+  * ``np.save`` / ``np.savez`` / ``np.savez_compressed`` called with a
+    path-like first argument (writing into an in-memory buffer such as
+    ``io.BytesIO`` is fine — that is how the atomic helper itself is
+    fed);
+  * ``Path.write_text`` / ``Path.write_bytes``;
+  * ``json.dump`` (use ``persist.atomic_write_json``).
+
+Deliberate non-durable writes (append-only WAL segments, CLI report
+output, scratch files) carry ``# repro: allow-plain-write: why``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from ..core import Finding
+
+#: module-path prefixes the rule applies to (config key ``durable_write_scope``)
+DEFAULT_SCOPE: Tuple[str, ...] = ("repro/",)
+#: modules never flagged (config key ``durable_write_exempt``) — the
+#: atomic helper itself has to perform the underlying plain writes.
+DEFAULT_EXEMPT: Tuple[str, ...] = ("repro/persist.py",)
+
+_NP_WRITERS = {"save", "savez", "savez_compressed"}
+_PATH_WRITERS = {"write_text", "write_bytes"}
+
+
+def _write_mode(call: ast.Call) -> Optional[str]:
+    """The mode string of an ``open()`` call iff it writes, else None."""
+    mode: Optional[ast.expr] = None
+    if len(call.args) >= 2:
+        mode = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    if mode is None:
+        return None  # default "r"
+    if not isinstance(mode, ast.Constant) or not isinstance(mode.value, str):
+        return None  # dynamic mode — can't prove a write
+    if any(ch in mode.value for ch in "wax+"):
+        return mode.value
+    return None
+
+
+def _buffer_arg(call: ast.Call) -> bool:
+    """Heuristically true when the first positional arg is an in-memory
+    buffer (``io.BytesIO()`` / a name like ``buf``), not a path."""
+    if not call.args:
+        return False
+    first = call.args[0]
+    if isinstance(first, ast.Call):
+        fn = first.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else getattr(fn, "id", "")
+        return name in ("BytesIO", "StringIO")
+    if isinstance(first, ast.Name):
+        return first.id in ("buf", "buffer", "bio", "fh", "fileobj")
+    return False
+
+
+def run(project, config) -> List[Finding]:
+    scope = tuple(config.get("durable_write_scope", DEFAULT_SCOPE))
+    exempt = tuple(config.get("durable_write_exempt", DEFAULT_EXEMPT))
+    findings: List[Finding] = []
+    for mod in project.modules:
+        if not mod.relpath.startswith(scope) or mod.relpath in exempt:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "open":
+                mode = _write_mode(node)
+                if mode is not None:
+                    findings.append(Finding(
+                        rule="R6", path=mod.relpath, line=node.lineno,
+                        message=f"`open(..., {mode!r})` writes to the final "
+                                f"path — a crash mid-write leaves a torn "
+                                f"file; use repro.persist.atomic_write_* or "
+                                f"justify with "
+                                f"`# repro: allow-plain-write: <why>`"))
+            elif isinstance(fn, ast.Attribute):
+                if (fn.attr in _NP_WRITERS
+                        and isinstance(fn.value, ast.Name)
+                        and fn.value.id in ("np", "numpy", "jnp")
+                        and not _buffer_arg(node)):
+                    findings.append(Finding(
+                        rule="R6", path=mod.relpath, line=node.lineno,
+                        message=f"`np.{fn.attr}` to a path is not "
+                                f"crash-atomic — use "
+                                f"repro.persist.atomic_savez (or write to "
+                                f"an io.BytesIO and hand the bytes to the "
+                                f"atomic helper)"))
+                elif fn.attr in _PATH_WRITERS:
+                    findings.append(Finding(
+                        rule="R6", path=mod.relpath, line=node.lineno,
+                        message=f"`.{fn.attr}` writes the final path "
+                                f"in place — use "
+                                f"repro.persist.atomic_write_text/bytes or "
+                                f"justify with "
+                                f"`# repro: allow-plain-write: <why>`"))
+                elif (fn.attr == "dump"
+                        and isinstance(fn.value, ast.Name)
+                        and fn.value.id == "json"):
+                    findings.append(Finding(
+                        rule="R6", path=mod.relpath, line=node.lineno,
+                        message="`json.dump` to an open file is not "
+                                "crash-atomic — use "
+                                "repro.persist.atomic_write_json"))
+    return findings

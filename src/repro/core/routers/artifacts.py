@@ -33,14 +33,26 @@ commit (``scripts/lint_gate.py --update-schema-pin``).
 """
 from __future__ import annotations
 
+import io
 import json
+import zipfile
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from .spec import FAMILIES, router_config, spec_of
 
+#: 6 makes artifacts crash-consistent and self-validating: both files are
+#: published atomically (temp -> fsync -> rename -> dir fsync via
+#: `repro.persist`), the manifest carries ``state_sha256`` (checksum of
+#: ``state.npz``, verified at load) and ``covered_wal_seq`` (the write-ahead
+#:-log sequence a serving checkpoint covers; None outside the durability
+#: path) — and any truncated/corrupt file now raises the typed
+#: `ArtifactCorruptError` naming the file and failing field instead of a
+#: raw zipfile/json traceback.  version<=5 artifacts (no checksum keys)
+#: still load; the checks apply only when the keys are present.
 #: 5 embeds the fitted serving `DispatchPolicy` in the manifest (a
 #: ``dispatch_policy`` JSON object: the measured backend table, wave-close
 #: constants, and autotuned kernel tiles — see `repro.core.routers.dispatch`)
@@ -57,8 +69,25 @@ from .spec import FAMILIES, router_config, spec_of
 #: raw rows); version-1/2/3/4 artifacts remain readable — restore is
 #: field-set driven, not version-switched, plus the one layout transpose
 #: above.
-FORMAT_VERSION = 5
+FORMAT_VERSION = 6
 MIN_FORMAT_VERSION = 1
+
+
+class ArtifactCorruptError(ValueError):
+    """A saved artifact failed structural validation: a missing/truncated
+    file, undecodable JSON/zip, or a checksum mismatch.  Carries WHICH file
+    and WHICH field failed so recovery tooling (`repro.serving.durability`)
+    can log precisely and fall back to the previous checkpoint instead of
+    ever loading a half-written snapshot."""
+
+    def __init__(self, path, file: str, field: str, detail: str = ""):
+        self.path = Path(path)
+        self.file = file
+        self.field = field
+        self.detail = detail
+        self.reason = f"{file}[{field}]" + (f": {detail}" if detail else "")
+        super().__init__(f"corrupt router artifact at {self.path} — "
+                         f"{self.reason}")
 _IVF_FIELDS = ("centroids", "sup_cm", "ids_cm", "inv_cm", "n_rows")
 _IVFPQ_FIELDS = ("centroids", "anchors", "codes_cm", "ids_cm", "inv_cm",
                  "codebooks", "sup_flat", "n_rows", "m", "nbits")
@@ -232,15 +261,23 @@ def restore_state(router, state):
     return router
 
 
-def save_router(router, path) -> Path:
+def save_router(router, path, covered_wal_seq=None) -> Path:
     """Persist a fitted router as ``manifest.json`` + ``state.npz`` under
-    ``path`` (created if needed).  Returns ``path``."""
+    ``path`` (created if needed).  Both files are published atomically
+    (temp -> fsync -> rename -> dir fsync) and the manifest checksums the
+    state, so a crash mid-save can never leave a half-written artifact at
+    the final names.  ``covered_wal_seq`` stamps the write-ahead-log
+    sequence this snapshot covers (serving checkpoints; None elsewhere).
+    Returns ``path``."""
     if router.model_names is None:
         raise ValueError("save_router requires a fitted router "
                          "(call .fit(ds) first)")
     path = Path(path)
     path.mkdir(parents=True, exist_ok=True)
-    np.savez(path / "state.npz", **router.state_dict())
+    bio = io.BytesIO()
+    np.savez(bio, **router.state_dict())
+    state_bytes = bio.getvalue()
+    persist.atomic_write_bytes(path / "state.npz", state_bytes)
     manifest = {
         "format_version": FORMAT_VERSION,
         "spec": spec_of(router),
@@ -254,16 +291,61 @@ def save_router(router, path) -> Path:
         "dispatch_policy": pol.to_dict()
         if (pol := getattr(router, "dispatch_policy", None)) is not None
         else None,
+        "state_sha256": persist.sha256_hex(state_bytes),
+        "covered_wal_seq": covered_wal_seq,
     }
-    (path / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    persist.atomic_write_json(path / "manifest.json", manifest)
     return path
+
+
+def _read_manifest(path: Path) -> dict:
+    """Parse + structurally validate ``manifest.json``, typed errors only."""
+    mf = path / "manifest.json"
+    if not mf.exists():
+        raise ArtifactCorruptError(path, "manifest.json", "missing",
+                                   "file does not exist")
+    try:
+        manifest = json.loads(mf.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError) as exc:
+        raise ArtifactCorruptError(path, "manifest.json", "json",
+                                   str(exc)) from exc
+    if not isinstance(manifest, dict):
+        raise ArtifactCorruptError(path, "manifest.json", "json",
+                                   "top level is not an object")
+    for field in ("family", "config", "model_names"):
+        if field not in manifest:
+            raise ArtifactCorruptError(path, "manifest.json", field,
+                                       "required field missing")
+    return manifest
+
+
+def _read_state(path: Path, manifest: dict) -> dict:
+    """Load ``state.npz`` with checksum verification (version>=6) and typed
+    errors for every way a truncated/corrupt zip can fail."""
+    sf = path / "state.npz"
+    if not sf.exists():
+        raise ArtifactCorruptError(path, "state.npz", "missing",
+                                   "file does not exist")
+    expect = manifest.get("state_sha256")
+    if expect is not None and persist.sha256_file(sf) != expect:
+        raise ArtifactCorruptError(
+            path, "state.npz", "state_sha256",
+            "checksum mismatch against the manifest — the state file is "
+            "corrupt or was not written with its manifest")
+    try:
+        with np.load(sf) as npz:
+            return {k: npz[k] for k in npz.files}
+    except (zipfile.BadZipFile, ValueError, OSError, KeyError,
+            EOFError) as exc:
+        raise ArtifactCorruptError(path, "state.npz", "npz",
+                                   f"{type(exc).__name__}: {exc}") from exc
 
 
 def load_router(path):
     """Rebuild a fitted router from a ``save_router`` artifact — no training
     data, no re-fit: construct from the manifest config, restore the state."""
     path = Path(path)
-    manifest = json.loads((path / "manifest.json").read_text())
+    manifest = _read_manifest(path)
     version = manifest.get("format_version")
     if not (isinstance(version, int)
             and MIN_FORMAT_VERSION <= version <= FORMAT_VERSION):
@@ -275,8 +357,7 @@ def load_router(path):
         raise ValueError(f"artifact family {manifest['family']!r} is not "
                          f"registered in this build")
     router = fam.cls(**manifest["config"])
-    with np.load(path / "state.npz") as npz:
-        state = {k: npz[k] for k in npz.files}
+    state = _read_state(path, manifest)
     if version < 4:
         # version<=3 packed PQ lists are row-major (C, L, MB); the live
         # layout is code-major (C, MB, L) — transpose once at load so old

@@ -284,6 +284,18 @@ class KNNRouter(Router):
         if isinstance(ivf, DynamicIVFIndex):
             ivf.join_recluster()
 
+    def set_recluster_hook(self, fn) -> None:
+        """Register ``fn()`` to run after every index compaction swap (the
+        durability layer's checkpoint trigger).  Attached to the live
+        `DynamicIVFIndex` now and re-attached when `partial_fit` wraps a
+        frozen index lazily; survives compaction swaps (the wrapper object
+        is stable).  The callback contract is the index's: flag-setting
+        only, it may run on the background rebuild thread."""
+        self._recluster_hook = fn
+        ivf = getattr(self, "_ivf", None)
+        if isinstance(ivf, DynamicIVFIndex):
+            ivf.on_recluster = fn
+
     # ---- deadline-driven graceful degradation ----
     @contextlib.contextmanager
     def degraded(self, level=None):
@@ -344,6 +356,7 @@ class KNNRouter(Router):
         if self.online and self.index != "exact":
             self._ivf = DynamicIVFIndex(self._ivf, delta_cap=self.delta_cap,
                                         build_kw=self._index_build_kw(seed))
+            self._ivf.on_recluster = getattr(self, "_recluster_hook", None)
         return self
 
     # ---- streaming updates: appending a row IS the whole training step ----
@@ -397,6 +410,8 @@ class KNNRouter(Router):
                 self._ivf = DynamicIVFIndex(
                     self._ivf, delta_cap=self.delta_cap,
                     build_kw=self._index_build_kw(self.fit_seed or 0))
+                self._ivf.on_recluster = getattr(self, "_recluster_hook",
+                                                 None)
             self._ivf.append(Xn)
             if recluster is True:
                 self._ivf.recluster()

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from . import pq as pqmod
 from .kernel import ivf_topk_pallas
 from .pq_kernel import ivfpq_adc_pallas
@@ -480,6 +481,13 @@ class DynamicIVFIndex:
         self._lock = threading.RLock()
         self._rc_thread: threading.Thread | None = None
         self._fused = None     # cached probed-delta arrays (fused backend)
+        #: mutation hook: called (no args, OUTSIDE the lock, on whichever
+        #: thread ran the compaction) after every re-cluster swap.  The
+        #: durability layer uses it to request a checkpoint — the callback
+        #: must only set a flag / enqueue, never join this thread or take
+        #: long locks, since on a background compaction it runs on the
+        #: daemon rebuild thread itself.
+        self.on_recluster = None
 
     # ---- delegated shape/meta ----
     # Even single-reference reads take the (reentrant) lock: a background
@@ -538,6 +546,11 @@ class DynamicIVFIndex:
             ids = (self.base.n_rows + len(self.delta_x)
                    + np.arange(len(rows), dtype=np.int32))
             self.delta_x = np.concatenate([self.delta_x, rows])
+            # kill-injection barrier: dying between the two delta mutations
+            # leaves torn IN-MEMORY state only — the process is gone, and
+            # recovery replays the batch from the WAL record fsync'd before
+            # this append was entered
+            persist.maybe_kill("index-mid-append")
             self.delta_assign = np.concatenate([self.delta_assign, assign])
             self.appends += len(rows)
             self._fused = None
@@ -650,6 +663,10 @@ class DynamicIVFIndex:
             rows = self.all_rows()
             n_delta_snap = len(self.delta_x)
         new_base = self._build_base(rows)      # slow: k-means + PQ training
+        # kill-injection barrier: a SIGKILL between build and swap loses the
+        # rebuilt base but NO data — recovery replays the delta rows from
+        # the WAL and re-runs the (seed-deterministic) compaction
+        persist.maybe_kill("recluster-pre-swap")
         with self._lock:
             tail = self.delta_x[n_delta_snap:]          # appended mid-build
             self.base = new_base
@@ -665,6 +682,10 @@ class DynamicIVFIndex:
                 self.delta_assign = np.zeros((0,), np.int32)
             self.reclusters += 1
             self._fused = None
+        cb = self.on_recluster
+        if cb is not None:
+            # outside the lock: the hook only flags work for another thread
+            cb()
 
     # ---- probed delta tier (fused backend) ----
     def fused_state(self) -> dict:

@@ -22,6 +22,7 @@ from pathlib import Path
 
 import jax
 
+from repro import persist
 from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
 from repro.distributed.sharding import sharding_context
 from repro.launch import hlo_analysis as HA
@@ -117,7 +118,7 @@ def merge_out(path: Path, rec: dict):
         key += f"|{rec['tag']}"
     data[key] = rec
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(data, indent=1, default=str))
+    persist.atomic_write_text(path, json.dumps(data, indent=1, default=str))
 
 
 def main():

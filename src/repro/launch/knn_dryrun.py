@@ -18,6 +18,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import persist
 from repro.core.sharded_knn import sharded_knn_topk
 from repro.launch import hlo_analysis as HA
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -97,7 +98,8 @@ def main():
               flush=True)
 
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
-    Path(args.out).write_text(json.dumps(results, indent=1, default=float))
+    persist.atomic_write_text(Path(args.out),
+                              json.dumps(results, indent=1, default=float))
     print(f"[knn_dryrun] wrote {args.out}")
 
 

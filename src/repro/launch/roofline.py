@@ -20,6 +20,7 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import persist
 from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
 from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
 
@@ -119,7 +120,8 @@ def main():
         rows.append(analyze(rec))
 
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
-    Path(args.out).write_text(json.dumps(rows, indent=1, default=float))
+    persist.atomic_write_text(Path(args.out),
+                              json.dumps(rows, indent=1, default=float))
 
     print("| arch | shape | compute(s) | memory(s) | collective(s) | "
           "dominant | useful ratio |")

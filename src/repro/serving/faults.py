@@ -83,6 +83,19 @@ class InjectedFault(RuntimeError):
     chaos-test assertions."""
 
 
+class FeedbackValidationError(ValueError):
+    """An ``observe()`` batch failed validation BEFORE the write-ahead log:
+    empty batch, non-finite embeddings/scores/costs, or a shape that does
+    not match the fitted model axis.  Typed (and raised pre-WAL) so garbage
+    is rejected at the door instead of ever becoming durable state that
+    every future recovery would replay.  Subclasses ValueError so legacy
+    callers catching ValueError keep working."""
+
+    def __init__(self, field: str, message: str):
+        super().__init__(message)
+        self.field = field
+
+
 # ---------------------------------------------------------------------------
 # circuit breaker
 # ---------------------------------------------------------------------------

@@ -63,6 +63,7 @@ import dataclasses
 import json
 import logging
 import math
+import signal
 import threading
 import time
 from typing import Dict, List, Optional, Tuple
@@ -136,6 +137,11 @@ def parse_model_name(name, service) -> Optional[float]:
             f"'{MODEL_PREFIX}<router-spec>' (this gateway serves "
             f"'{MODEL_PREFIX}{service.spec}')")
     raw = name[len(MODEL_PREFIX):]
+    if raw == service.spec:
+        # a client echoing the advertised model id verbatim (/v1/models)
+        # must always resolve, even when the served spec itself carries
+        # ctor kwargs (e.g. an online router's '@online=1,delta_cap=...')
+        return None
     try:
         spec = parse_spec(raw)
     except ValueError as exc:
@@ -315,6 +321,9 @@ class Gateway:
 
         self._lock = threading.Lock()       # guards batcher + _pending
         self._pending: Dict[int, _Pending] = {}
+        #: SIGTERM graceful-drain flag: admissions answer 503 "draining"
+        #: (and /health readiness flips) while in-flight waves finish
+        self._draining = False
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._started = threading.Event()
@@ -374,6 +383,51 @@ class Gateway:
         if self._http_thread is not None:
             self._http_thread.join(timeout=30.0)
         self.service.close()
+
+    def begin_drain(self) -> None:
+        """Flip into draining: new submissions (and /health readiness) get
+        503 "draining" immediately; waves already admitted keep running."""
+        self._draining = True
+
+    def drain(self, timeout_s: float = 60.0) -> None:
+        """SIGTERM graceful shutdown: stop admissions, let the in-flight
+        waves resolve (bounded by ``timeout_s``), write a final durability
+        checkpoint, then take the port dark (`close`)."""
+        self.begin_drain()
+        log.info("draining: admissions stopped, waiting for in-flight waves")
+        deadline = time.monotonic() + max(0.0, timeout_s)
+        while time.monotonic() < deadline:
+            with self._lock:
+                idle = not self._pending and self.batcher.pending() == 0
+            if idle:
+                break
+            time.sleep(max(self.poll_interval_s, 0.002))
+        # give just-resolved handlers one beat to flush their last bytes
+        # before the event loop stops
+        time.sleep(5 * self.poll_interval_s)
+        try:
+            path = self.service.checkpoint()
+            if path is not None:
+                log.info("final checkpoint written to %s", path)
+        except Exception:
+            log.exception("final checkpoint failed during drain")
+        self.close()
+        log.info("drain complete, port dark")
+
+    def install_signal_handlers(self, signums=(signal.SIGTERM,)) -> Dict:
+        """Route SIGTERM to `drain` (on a worker thread — handlers run on
+        the main thread, and drain blocks).  Returns {signum: previous
+        handler} so tests can restore."""
+        prev = {}
+
+        def _handler(signum, frame):
+            log.info("signal %d received, starting graceful drain", signum)
+            threading.Thread(target=self.drain, name="gateway-drain",
+                             daemon=True).start()
+
+        for s in signums:
+            prev[s] = signal.signal(s, _handler)
+        return prev
 
     def __enter__(self) -> "Gateway":
         return self.start()
@@ -508,6 +562,8 @@ class Gateway:
                 await self._chat(reader, writer, body)
             elif path == "/health":
                 await self._health(writer, method)
+            elif path == "/health/live":
+                await self._live(writer, method)
             elif path == "/stats":
                 await self._stats(writer, method)
             elif path == "/v1/models":
@@ -597,12 +653,33 @@ class Gateway:
             raise GatewayError(405, "method_not_allowed",
                                f"{method} not allowed on {path}")
 
-    async def _health(self, writer, method: str) -> None:
-        self._require_get(method, "/health")
+    def _readiness(self) -> Tuple[int, Dict]:
+        """Readiness state machine: "starting" (503, recovery replay not
+        finished) -> "ok"/"degraded" (breaker view) -> "draining" (503,
+        SIGTERM received).  Liveness is a separate endpoint — a draining or
+        replaying process is alive but must not receive traffic."""
+        if self._draining or self._stop.is_set():
+            return 503, {"status": "draining",
+                         "in_flight": len(self._pending)}
+        rec = self.service.recovery_status()
+        if rec is not None and rec.get("status") == "replaying":
+            return 503, {"status": "starting", "recovery": rec}
         st = self.service.stats()
         ok = all(st.get("available", {}).values())
-        payload = {"status": "ok" if ok else "degraded", **st}
-        await self._send_json(writer, 200 if ok else 503, payload)
+        return 200 if ok else 503, {"status": "ok" if ok else "degraded",
+                                    **st}
+
+    async def _health(self, writer, method: str) -> None:
+        self._require_get(method, "/health")
+        status, payload = self._readiness()
+        await self._send_json(writer, status, payload)
+
+    async def _live(self, writer, method: str) -> None:
+        """Liveness: 200 whenever the event loop serves — draining and
+        recovery replay are READINESS failures, not liveness ones, so an
+        orchestrator restarts only truly wedged processes."""
+        self._require_get(method, "/health/live")
+        await self._send_json(writer, 200, {"status": "alive"})
 
     async def _stats(self, writer, method: str) -> None:
         self._require_get(method, "/stats")
@@ -625,6 +702,7 @@ class Gateway:
             "gateway": {
                 **{k: int(v) for k, v in sorted(self.counters.items())},
                 "in_flight": in_flight,
+                "draining": self._draining,
                 "batcher": batcher,
                 "ttft_p50_s": _percentile(ttfts, 50),
                 "ttft_p99_s": _percentile(ttfts, 99),
@@ -644,10 +722,20 @@ class Gateway:
     # ---- POST /v1/chat/completions ----
     def _submit(self, h: _Pending, prompt: str,
                 lam: Optional[float]) -> None:
+        rec = self.service.recovery_status()
+        if rec is not None and rec.get("status") == "replaying":
+            raise GatewayError(503, "starting",
+                               "gateway is replaying its write-ahead log; "
+                               "not ready for traffic yet",
+                               detail={"recovery": rec})
         with self._lock:
             if self._stop.is_set():
                 raise GatewayError(503, "shutting_down",
                                    "gateway is shutting down")
+            if self._draining:
+                raise GatewayError(503, "draining",
+                                   "gateway is draining; not accepting new "
+                                   "requests")
             try:
                 h.ticket = self.batcher.submit(prompt, lam)
             except Overloaded as exc:
@@ -903,11 +991,19 @@ class Gateway:
 def demo_gateway(pool=("qwen3-4b", "mamba2-370m"), router: str = "knn10",
                  *, n_support: int = 120, seed: int = 0, lam: float = 0.0,
                  engine_timeout_s: float = 10.0, max_slots: int = 4,
+                 state_dir: Optional[str] = None,
                  **gateway_kw) -> Gateway:
     """Build an (unstarted) gateway over a pool of reduced-config engines
     and a router fitted on the synthetic routed-serving support set — the
     boot used by the example client, the CI smoke script, and the load
-    benchmark."""
+    benchmark.
+
+    ``state_dir`` makes the service durable: observe() batches are
+    write-ahead-logged + checkpointed there, and a directory that already
+    holds a checkpoint boots through `RouterService.recover` (WAL-suffix
+    replay) instead of refitting — restart = resume."""
+    from pathlib import Path
+
     from repro.configs import get_config, reduced
     from repro.launch.serve import build_support
     from .engine import ServingEngine
@@ -916,9 +1012,18 @@ def demo_gateway(pool=("qwen3-4b", "mamba2-370m"), router: str = "knn10",
                                    max_slots=max_slots, cache_len=96,
                                    seed=i)
                for i, name in enumerate(pool)}
-    ds = build_support(list(pool), n=n_support, seed=seed)
-    svc = RouterService(router, engines, ds=ds, lam=lam, seed=seed,
-                        engine_timeout_s=engine_timeout_s)
+    svc_kw = dict(lam=lam, engine_timeout_s=engine_timeout_s)
+    if state_dir and (Path(state_dir) / "checkpoints").exists() and \
+            any((Path(state_dir) / "checkpoints").iterdir()):
+        svc = RouterService.recover(state_dir, engines, **svc_kw)
+    else:
+        durability = None
+        if state_dir:
+            from .durability import DurabilityManager
+            durability = DurabilityManager(state_dir)
+        ds = build_support(list(pool), n=n_support, seed=seed)
+        svc = RouterService(router, engines, ds=ds, seed=seed,
+                            durability=durability, **svc_kw)
     return Gateway(svc, **gateway_kw)
 
 
@@ -934,17 +1039,26 @@ def main(argv=None) -> None:
     ap.add_argument("--lam", type=float, default=0.0,
                     help="service default lambda (overridden per request "
                          "by '@lam=' in the model name)")
+    ap.add_argument("--state-dir", default=None,
+                    help="durability root (WAL + checkpoints); a dir that "
+                         "already holds a checkpoint boots via recovery "
+                         "replay instead of refitting")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="SIGTERM graceful-drain budget in seconds")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
     gw = demo_gateway(tuple(args.pool), args.router, lam=args.lam,
+                      state_dir=args.state_dir,
                       host=args.host, port=args.port)
     with gw:
+        gw.install_signal_handlers()
         print(f"serving {gw.model_name} on http://{gw.host}:{gw.port}  "
-              f"(POST /v1/chat/completions, GET /health /stats)")
+              f"(POST /v1/chat/completions, GET /health /stats; "
+              f"SIGTERM drains gracefully)")
         try:
-            while True:
-                time.sleep(3600)
+            while not gw._closed:
+                time.sleep(0.2)
         except KeyboardInterrupt:
             print("shutting down")
 

@@ -57,7 +57,8 @@ from repro.core.routers import (Router, RouterSpec, load_router, make_router,
 from . import encoder
 from .engine import IncompleteDrainError, Request, ServingEngine
 from .faults import (CircuitOpenError, DegradationLadder,
-                     EngineDeadlineExceeded, EngineHealth, ExecutionReport)
+                     EngineDeadlineExceeded, EngineHealth, ExecutionReport,
+                     FeedbackValidationError)
 
 
 @dataclasses.dataclass
@@ -143,7 +144,8 @@ class RouterService:
                  engine_timeout_s: Optional[float] = None,
                  max_route_attempts: int = 3,
                  retry_backoff_s: float = 0.0,
-                 ladder: Optional[DegradationLadder] = None):
+                 ladder: Optional[DegradationLadder] = None,
+                 durability=None):
         if isinstance(router, (str, RouterSpec)):
             router = make_router(router)
         if router.model_names is None and ds is None:
@@ -177,6 +179,26 @@ class RouterService:
         self.retry_backoff_s = float(retry_backoff_s)
         self.ladder = ladder if ladder is not None else DegradationLadder()
         self._mask_cache: Dict = {}
+        #: `repro.serving.durability.DurabilityManager` (or None): when set,
+        #: every observe() batch is WAL-logged + fsync'd BEFORE it touches
+        #: the index, and checkpoints run on the batch cadence / after every
+        #: re-cluster.  Duck-typed so this module never imports the
+        #: durability layer.
+        self.durability = durability
+        #: recovery progress ({"status": "replaying"/"ready", counters...});
+        #: None for a service that never recovered — /health readiness reads
+        #: it through `recovery_status()`
+        self._recovery: Optional[Dict] = None
+        self._pending_replay: List = []
+        if durability is not None:
+            hook = getattr(self.router, "set_recluster_hook", None)
+            if callable(hook):
+                hook(durability.request_checkpoint)
+            if not durability.checkpoints.list():
+                # bootstrap snapshot: recovery always has a base to load +
+                # replay onto, even if the process dies before the first
+                # cadence checkpoint
+                durability.checkpoint(self.router)
 
     @classmethod
     def from_artifact(cls, path, engines: Dict[str, ServingEngine],
@@ -252,6 +274,9 @@ class RouterService:
             "observed": self.observed,
             "routed": len(self.log),
             "support_size": support,
+            "durability": (None if self.durability is None
+                           else self.durability.stats()),
+            "recovery": self.recovery_status(),
         })
 
     # ---- lifecycle ----
@@ -269,6 +294,11 @@ class RouterService:
         jr = getattr(self.router, "join_recluster", None)
         if callable(jr):
             jr()
+        if self.durability is not None and self.durability.checkpoint_pending:
+            # a background compaction finished since the last observe;
+            # persist the compacted state before standing down
+            with self.durability.mutex:
+                self.durability.checkpoint(self.router)
 
     def __enter__(self) -> "RouterService":
         return self
@@ -465,24 +495,161 @@ class RouterService:
         index swap, so even THIS call returns without waiting on k-means.
         Pass ``"auto"`` to compact synchronously in-line, ``False`` to
         defer entirely, ``True`` to force a synchronous compaction now.
-        Returns the router's support size after ingestion."""
+
+        With a `DurabilityManager` attached the batch is validated, then
+        serialized + fsync'd to the write-ahead log, and only THEN applied
+        — so every acknowledged observe survives a crash, and garbage never
+        becomes durable (validation failures are typed errors raised before
+        the WAL write).  Returns the router's support size after
+        ingestion."""
         pf = getattr(self.router, "partial_fit", None)
         if not callable(pf):
             raise TypeError(f"router {self.spec!r} does not support online "
                             f"updates (no partial_fit); use a kNN-family "
                             f"router, e.g. 'knn100-ivf@online=1'")
-        if len(queries) and isinstance(queries[0], str):
+        emb, S, C = self._validate_feedback(queries, scores, costs)
+        dur = self.durability
+        if dur is None:
+            pf(emb, S, C, recluster=recluster)
+            self.observed += len(emb)
+            return int(getattr(self.router, "support_size", -1))
+        with dur.mutex:
+            seq = dur.log(emb, S, C)       # fsync ack BEFORE any mutation
+            pf(emb, S, C, recluster=recluster)
+            dur.note_applied(seq)
+            self.observed += len(emb)
+            if dur.should_checkpoint():
+                dur.checkpoint(self.router)
+        return int(getattr(self.router, "support_size", -1))
+
+    def _validate_feedback(self, queries, scores, costs):
+        """Typed validation of one observe() batch — every check fires
+        BEFORE the WAL write, so rejected garbage is never made durable.
+        Returns the normalized (emb, scores, costs) float32 arrays."""
+        if len(queries) == 0:
+            raise FeedbackValidationError(
+                "queries", "observe() got an empty batch — nothing to log "
+                "or apply")
+        if isinstance(queries[0], str):
             emb = encoder.embed_texts(list(queries))
         else:
             emb = np.atleast_2d(np.asarray(queries, np.float32))
+        if emb.ndim != 2 or emb.shape[0] == 0:
+            raise FeedbackValidationError(
+                "queries", f"embeddings must be a non-empty (n, D) matrix, "
+                           f"got shape {emb.shape}")
+        dim = getattr(self.router, "embed_dim", None)
+        if dim is not None and emb.shape[1] != dim:
+            raise FeedbackValidationError(
+                "queries", f"embedding dim {emb.shape[1]} does not match "
+                           f"the router's fitted dim {dim}")
+        if not np.isfinite(emb).all():
+            raise FeedbackValidationError(
+                "queries", "embeddings contain NaN/inf — refusing to make "
+                           "non-finite support rows durable")
+        M = len(self.model_names)
         S = np.atleast_2d(np.asarray(scores, np.float32))
-        if S.shape != (len(emb), len(self.model_names)):
-            raise ValueError(f"scores must have shape ({len(emb)}, "
-                             f"{len(self.model_names)}) in model order "
-                             f"{self.model_names}, got {S.shape}")
-        pf(emb, S, costs, recluster=recluster)
-        self.observed += len(emb)
-        return int(getattr(self.router, "support_size", -1))
+        if S.shape != (len(emb), M):
+            raise FeedbackValidationError(
+                "scores", f"scores must have shape ({len(emb)}, {M}) in "
+                          f"model order {self.model_names}, got {S.shape}")
+        if not np.isfinite(S).all():
+            raise FeedbackValidationError(
+                "scores", "scores contain NaN/inf")
+        if costs is None:
+            C = np.zeros_like(S)
+        else:
+            C = np.atleast_2d(np.asarray(costs, np.float32))
+            if C.shape != S.shape:
+                raise FeedbackValidationError(
+                    "costs", f"costs must match scores shape {S.shape}, "
+                             f"got {C.shape}")
+            if not np.isfinite(C).all():
+                raise FeedbackValidationError("costs", "costs contain "
+                                              "NaN/inf")
+        return emb, S, C
+
+    # ---- durability / crash recovery ----
+    def checkpoint(self):
+        """Snapshot the router through the attached `DurabilityManager`
+        (atomic artifact write recording the covered WAL sequence); no-op
+        returning None without one.  Joins any in-flight background
+        compaction first (artifact serialization requires one consistent
+        base/delta pair)."""
+        if self.durability is None:
+            return None
+        with self.durability.mutex:
+            return self.durability.checkpoint(self.router)
+
+    @classmethod
+    def open_recovery(cls, root, engines: Dict[str, ServingEngine], *,
+                      durability_kw: Optional[Dict] = None,
+                      **service_kw) -> "RouterService":
+        """Phase 1 of crash recovery: load the newest valid checkpoint
+        under ``root`` (corrupt snapshots are skipped, never loaded) and
+        stage the WAL suffix it does not cover.  The returned service
+        reports ``recovery_status()["status"] == "replaying"`` — a gateway
+        answers readiness 503 "starting" — until `complete_recovery` has
+        replayed the suffix."""
+        from .durability import DurabilityManager
+        dur = DurabilityManager(root, **(durability_kw or {}))
+        router, covered_seq, skipped = dur.load_latest_checkpoint()
+        if router is None:
+            raise FileNotFoundError(
+                f"no loadable checkpoint under {root!r} "
+                f"(skipped corrupt: {skipped or 'none'}) — recovery needs "
+                f"the bootstrap snapshot a durable service writes at "
+                f"construction")
+        svc = cls(router, engines, durability=dur, **service_kw)
+        svc._pending_replay = dur.pending_records()
+        svc._recovery = {
+            "status": "replaying",
+            "checkpoint_covered_seq": covered_seq,
+            "corrupt_checkpoints_skipped": len(skipped),
+            "skipped_detail": list(skipped),
+            "wal_torn_tail_dropped": dur.wal.torn_tail_dropped,
+            "pending_batches": len(svc._pending_replay),
+            "replayed_batches": 0,
+            "replayed_rows": 0,
+        }
+        return svc
+
+    def complete_recovery(self, recluster="auto") -> int:
+        """Phase 2: replay the staged WAL suffix through ``partial_fit``
+        (same batch boundaries, synchronous compaction -> the recovered
+        index converges to the same support and bitwise-identical retrieval
+        as the uncrashed process).  Replayed batches are NOT re-logged —
+        they are already durable.  Returns the number of batches replayed
+        and flips recovery status to "ready"."""
+        dur = self.durability
+        rec = self._recovery
+        if dur is None or rec is None:
+            return 0
+        pf = getattr(self.router, "partial_fit")
+        with dur.mutex:
+            for r in self._pending_replay:
+                pf(r.emb, r.scores, r.costs, recluster=recluster)
+                dur.note_applied(r.seq)
+                self.observed += len(r.emb)
+                rec["replayed_batches"] += 1
+                rec["replayed_rows"] += int(len(r.emb))
+            self._pending_replay = []
+            rec["status"] = "ready"
+        return rec["replayed_batches"]
+
+    @classmethod
+    def recover(cls, root, engines: Dict[str, ServingEngine],
+                **kw) -> "RouterService":
+        """Boot-time crash recovery in one call: latest valid checkpoint +
+        WAL-suffix replay (see `open_recovery` / `complete_recovery`)."""
+        svc = cls.open_recovery(root, engines, **kw)
+        svc.complete_recovery()
+        return svc
+
+    def recovery_status(self) -> Optional[Dict]:
+        """Replay progress ({"status": "replaying"/"ready", counters}) or
+        None for a service that did not boot through recovery."""
+        return None if self._recovery is None else dict(self._recovery)
 
     # ---- execution ----
     def _run_engine(self, m: str, reqs: List[Request]) -> int:

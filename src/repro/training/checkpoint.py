@@ -10,6 +10,8 @@ import os
 import jax
 import numpy as np
 
+from repro import persist
+
 
 def _flatten(tree):
     flat = {}
@@ -21,10 +23,8 @@ def _flatten(tree):
 
 
 def save(path: str, tree) -> None:
-    tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(tmp, **_flatten(tree))
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    persist.atomic_savez(path, **_flatten(tree))
 
 
 def restore(path: str, template):

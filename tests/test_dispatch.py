@@ -166,7 +166,7 @@ def test_artifact_round_trips_policy(tmp_path, ds, X, policy):
     r.dispatch_policy = policy
     save_router(r, tmp_path / "art")
     manifest = json.loads((tmp_path / "art" / "manifest.json").read_text())
-    assert manifest["format_version"] == 5
+    assert manifest["format_version"] == 6
     assert manifest["dispatch_policy"] == policy.to_dict()
     r2 = load_router(tmp_path / "art")
     assert r2.dispatch_policy.to_dict() == policy.to_dict()

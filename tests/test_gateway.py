@@ -487,6 +487,125 @@ def test_clean_shutdown_under_watchdog(engines, watchdog):
 
 
 # ---------------------------------------------------------------------------
+# durability: liveness vs readiness, recovery replay, SIGTERM drain
+# ---------------------------------------------------------------------------
+
+
+def _durable_service(engines, root, **kw):
+    from repro.serving.durability import DurabilityManager
+    kw.setdefault("lam", 0.0)
+    kw.setdefault("engine_timeout_s", 10.0)
+    return RouterService("knn5-ivf@online=1", engines, ds=_ds(), seed=0,
+                         durability=DurabilityManager(root), **kw)
+
+
+def _observe_batches(svc, n_batches, seed=7):
+    rng = np.random.default_rng(seed)
+    dim = _ds().dim
+    for _ in range(n_batches):
+        svc.observe(rng.normal(size=(3, dim)).astype(np.float32),
+                    rng.uniform(0.2, 1.0, (3, 2)).astype(np.float32))
+
+
+def test_liveness_and_readiness_are_separate_endpoints(gw):
+    status, _, body = _get(gw.port, "/health/live")
+    assert status == 200 and json.loads(body)["status"] == "alive"
+    status, _, body = _get(gw.port, "/health")
+    assert status == 200 and json.loads(body)["status"] == "ok"
+
+
+def test_readiness_starting_during_recovery_replay(engines, tmp_path):
+    """A gateway booted mid-recovery answers readiness 503 "starting" and
+    rejects submissions with a typed 503 — while liveness stays 200 — then
+    flips ready once the WAL replay completes, with the replay counters
+    visible in /stats."""
+    root = tmp_path / "state"
+    _observe_batches(_durable_service(engines, root), 3)   # no clean stop
+
+    svc = RouterService.open_recovery(root, engines, lam=0.0,
+                                      engine_timeout_s=10.0)
+    g = _gateway(svc).start()
+    try:
+        status, _, body = _get(g.port, "/health")
+        payload = json.loads(body)
+        assert status == 503 and payload["status"] == "starting"
+        assert payload["recovery"]["status"] == "replaying"
+        status, _, body = _get(g.port, "/health/live")
+        assert status == 200
+        status, _, body = _chat(g.port, model=MODEL_PREFIX + svc.spec)
+        assert status == 503
+        assert json.loads(body)["error"]["code"] == "starting"
+
+        svc.complete_recovery()
+        status, _, body = _get(g.port, "/health")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+        status, _, body = _get(g.port, "/stats")
+        rec = json.loads(body)["service"]["recovery"]
+        assert rec["status"] == "ready" and rec["replayed_batches"] == 3
+        assert rec["replayed_rows"] == 9
+        dur = json.loads(body)["service"]["durability"]
+        assert dur["wal"]["applied_seq"] == 2
+    finally:
+        g.close()
+
+
+def test_drain_rejects_new_work_then_takes_port_dark(engines, tmp_path):
+    """begin_drain flips readiness to 503 "draining" and sheds new
+    submissions with a typed error (liveness still 200); drain() then
+    writes a final checkpoint and closes the port."""
+    svc = _durable_service(engines, tmp_path / "state")
+    _observe_batches(svc, 1)
+    g = _gateway(svc).start()
+    port = g.port
+    try:
+        g.begin_drain()
+        status, _, body = _get(port, "/health")
+        assert status == 503
+        assert json.loads(body)["status"] == "draining"
+        status, _, body = _get(port, "/health/live")
+        assert status == 200
+        status, _, body = _chat(port, max_tokens=2,
+                                model=MODEL_PREFIX + svc.spec)
+        assert status == 503
+        assert json.loads(body)["error"]["code"] == "draining"
+        status, _, body = _get(port, "/stats")
+        assert json.loads(body)["gateway"]["draining"] is True
+
+        ckpts_before = svc.durability.checkpoints_written
+        g.drain(timeout_s=10.0)
+        assert svc.durability.checkpoints_written == ckpts_before + 1
+        assert svc.durability.covered_seq == 0           # the observed batch
+        assert not g._http_thread.is_alive()
+        with pytest.raises(OSError):
+            socket.create_connection(("127.0.0.1", port), timeout=2)
+    finally:
+        g.close()
+
+
+def test_sigterm_triggers_graceful_drain(engines, tmp_path):
+    """A real SIGTERM to this process drains the gateway: admissions stop,
+    a final checkpoint lands, the port goes dark.  The previous handler is
+    restored afterwards so the test process keeps its semantics."""
+    import os
+    import signal as signal_mod
+    svc = _durable_service(engines, tmp_path / "state")
+    g = _gateway(svc).start()
+    port = g.port
+    prev = g.install_signal_handlers()
+    try:
+        ckpts_before = svc.durability.checkpoints_written
+        os.kill(os.getpid(), signal_mod.SIGTERM)
+        _wait_until(lambda: g._closed, timeout=30.0, msg="drain after SIGTERM")
+        assert svc.durability.checkpoints_written == ckpts_before + 1
+        with pytest.raises(OSError):
+            socket.create_connection(("127.0.0.1", port), timeout=2)
+    finally:
+        for signum, handler in prev.items():
+            signal_mod.signal(signum, handler)
+        g.close()
+
+
+# ---------------------------------------------------------------------------
 # property fuzz: spec grammar round-trip + model-name parsing
 # ---------------------------------------------------------------------------
 

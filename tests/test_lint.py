@@ -372,6 +372,71 @@ def test_r5_scope_and_pragma(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# R6 durable-write discipline
+# ---------------------------------------------------------------------------
+
+def test_r6_flags_plain_writes_to_final_paths(tmp_path):
+    put(tmp_path, "repro/core/mod.py", """
+        import json
+        import numpy as np
+
+        def save_all(path, arr, meta, fh):
+            np.savez(path, arr=arr)
+            with open(path, "w") as f:
+                f.write("x")
+            path.write_text("y")
+            json.dump(meta, fh)
+    """)
+    active, _ = lint(tmp_path, rules=["R6"])
+    msgs = {f.line: f.message for f in active}
+    assert set(msgs) == {6, 7, 9, 10}
+    assert "atomic_savez" in msgs[6]
+    assert "torn file" in msgs[7]
+    assert "atomic_write_text" in msgs[9]
+    assert "atomic_write_json" in msgs[10]
+
+
+def test_r6_reads_and_buffer_writes_pass(tmp_path):
+    put(tmp_path, "repro/core/mod.py", """
+        import io
+        import numpy as np
+
+        def load_and_serialize(path):
+            with open(path) as f:                  # default "r"
+                text = f.read()
+            with open(path, "rb") as f:
+                raw = f.read()
+            bio = io.BytesIO()
+            np.savez(bio, x=np.zeros(1))           # in-memory: fine
+            buf = io.BytesIO()
+            np.savez(buf, x=np.zeros(1))
+            return text, raw, bio.getvalue()
+    """)
+    active, _ = lint(tmp_path, rules=["R6"])
+    assert [f.render() for f in active] == []
+
+
+def test_r6_pragma_and_exempt_helper(tmp_path):
+    code = """
+        def publish(tmp):
+            # repro: allow-plain-write: targets the temp name only
+            with open(tmp, "wb") as f:
+                f.write(b"x")
+            with open(tmp, "ab") as f:
+                f.write(b"y")
+    """
+    put(tmp_path, "repro/mod.py", code)
+    active, _ = lint(tmp_path, rules=["R6"])
+    # the justified pragma clears line 4; the unpragma'd append still flags
+    assert [(f.line, f.rule) for f in active] == [(6, "R6")]
+    # the atomic helper module itself is exempt — it IS the plain writer
+    put(tmp_path, "repro/persist.py", code.replace(
+        "# repro: allow-plain-write: targets the temp name only", "pass"))
+    active, _ = lint(tmp_path, rules=["R6"])
+    assert [f.path for f in active] == ["repro/mod.py"]
+
+
+# ---------------------------------------------------------------------------
 # baseline mechanics + the CLI gate
 # ---------------------------------------------------------------------------
 

@@ -179,12 +179,13 @@ FIXTURES = Path(__file__).resolve().parent / "fixtures"
 def test_dynamic_artifact_round_trip_bitwise(ds, tmp_path):
     """A mid-stream router (pending delta rows, counters ticking) reloads
     bitwise: same predictions, same delta tier, same re-cluster bookkeeping,
-    and the manifest advertises the current format_version (5: manifest-level
-    dispatch policy on top of the code-major packed-code layout)."""
+    and the manifest advertises the current format_version (6: atomic
+    publication + state checksum + WAL coverage on top of v5's manifest-level
+    dispatch policy)."""
     import json
     from repro.core.routers.artifacts import FORMAT_VERSION
     from repro.kernels.knn_ivf.ops import DynamicIVFIndex
-    assert FORMAT_VERSION == 5
+    assert FORMAT_VERSION == 6
     r = make_router("knn10-ivfpq@online=1,delta_cap=7,m=2").fit(ds)
     rng = np.random.default_rng(4)
     X = ds.part("test")[0]
